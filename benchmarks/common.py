@@ -1,0 +1,59 @@
+"""Shared benchmark utilities: timing + the trained quantized MLP used by
+the Fig 5/6/7 reproductions (trained once per process, cached)."""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or \
+            isinstance(r, (jnp.ndarray, tuple, list, dict)) else None
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+@lru_cache(maxsize=1)
+def trained_quantized_mlp():
+    """Train the paper MLP on the (procedural) MNIST data and quantize."""
+    from repro.data.synthetic_mnist import load_mnist
+    from repro.nn import mlp_paper as M
+    from repro.train.optimizer import adamw, apply_updates
+
+    data = load_mnist(n_train=6000, n_test=2000, seed=0)
+    params = M.init_params(jax.random.PRNGKey(0))
+    opt = adamw(lr=3e-3, weight_decay=1e-4)
+    state = opt.init(params)
+
+    def loss_fn(p, x, y):
+        lp = jax.nn.log_softmax(M.apply_float(p, x))
+        return -jnp.take_along_axis(lp, y[:, None], axis=1).mean()
+
+    @jax.jit
+    def step(p, s, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s, l
+
+    rng = np.random.default_rng(0)
+    for epoch in range(30):
+        idx = rng.permutation(len(data.train_x))
+        for i in range(0, len(idx) - 127, 128):
+            b = idx[i:i + 128]
+            params, state, _ = step(params, state,
+                                    jnp.asarray(data.train_x[b]),
+                                    jnp.asarray(data.train_y[b]))
+    qm = M.QuantizedMLP.from_float(params, data.train_x[:2000])
+    return params, qm, data

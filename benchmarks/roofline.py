@@ -1,0 +1,159 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+  memory term     = HLO_bytes_per_device / HBM_bw             [s]
+  collective term = collective_bytes_per_device / link_bw     [s]
+dominant = argmax; MODEL_FLOPS = 6*N*D (train, N=active params) or
+2*N*D (prefill) or 2*N per token (decode); usefulness ratio =
+MODEL_FLOPS / (HLO_FLOPs * n_devices).
+
+HLO numbers are the scan-corrected ("corrected") values from the probe
+extrapolation (see launch/dryrun.py).  xLSTM gets an analytic sLSTM
+correction (the per-timestep scan body is invisible to HloCostAnalysis).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs.registry import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def active_params(cfg) -> float:
+    """Active parameters per token (MoE counts top_k experts only)."""
+    n = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    per_layer_attn = (cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads)
+                      * cfg.head_dim
+                      + cfg.n_heads * cfg.head_dim * cfg.d_model)
+    kinds = cfg.layer_kinds()
+    total = float(n)
+    for kind in kinds:
+        if kind in ("global", "local"):
+            total += per_layer_attn
+            if cfg.n_experts:
+                glu = 3
+                total += (cfg.top_k * glu * cfg.d_model * cfg.d_ff
+                          + cfg.d_model * cfg.n_experts)
+            elif cfg.d_ff:
+                glu = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+                total += glu * cfg.d_model * cfg.d_ff
+        elif kind == "recurrent":
+            total += (2 * cfg.d_model * cfg.lru_width
+                      + cfg.lru_width * cfg.d_model
+                      + 2 * cfg.lru_width * cfg.lru_width)
+            glu = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+            total += glu * cfg.d_model * cfg.d_ff
+        elif kind == "mlstm":
+            di = int(cfg.d_model * cfg.mlstm_proj_factor)
+            total += 2 * cfg.d_model * di + 3 * di * di + di * cfg.d_model
+        elif kind == "slstm":
+            total += (4 * cfg.d_model * cfg.d_model
+                      + 4 * cfg.d_model * cfg.d_model // cfg.n_heads
+                      + 3 * cfg.d_model * int(cfg.d_model * 4 / 3))
+    if cfg.encoder_decoder:   # encoder layers (same shape as decoder attn+mlp)
+        total += cfg.n_enc_layers * (per_layer_attn
+                                     + 2 * cfg.d_model * cfg.d_ff)
+    return total
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    n = active_params(cfg)
+    if cell.step == "train":
+        tokens = cell.global_batch * cell.seq_len
+        if cfg.encoder_decoder:
+            tokens = cell.global_batch * (cell.seq_len + cell.seq_len // 8)
+        return 6.0 * n * tokens
+    if cell.step == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch      # decode: one token per row
+
+
+def slstm_correction(arch: str, shape: str) -> float:
+    """Analytic per-device flops of the sLSTM time scan (invisible to
+    HloCostAnalysis): recurrent einsum + ~10 elementwise ops per step."""
+    if arch != "xlstm-350m":
+        return 0.0
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    if cell.step == "decode":
+        return 0.0   # single step is fully visible
+    n_slstm = sum(1 for k in cfg.layer_kinds() if k == "slstm")
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    per_step = 2 * d * 4 * hd + 10 * 4 * d          # recurrent matmul + elementwise
+    tokens = cell.global_batch * cell.seq_len
+    mult = 3.0 if cell.step == "train" else 1.0     # fwd+bwd
+    return n_slstm * tokens * per_step * mult / 256.0
+
+
+def load_cells(mesh_tag: str = "pod16x16") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, mesh_tag, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def roofline_row(rec: dict) -> dict:
+    arch, shape = rec["arch"], rec["shape"]
+    nd = rec["n_devices"]
+    corr = rec.get("corrected") or {}
+    flops = corr.get("flops_per_device") or rec["cost"]["flops_per_device"]
+    flops += slstm_correction(arch, shape)
+    bts = corr.get("bytes_per_device") or rec["cost"]["bytes_per_device"]
+    coll = (corr.get("collectives") or rec["collectives"]).get(
+        "total_bytes", 0)
+    t_c = flops / PEAK_BF16_FLOPS
+    t_m = bts / HBM_BW
+    t_x = coll / (3 * ICI_BW)          # ~3 usable ICI links per v5e chip
+    dominant = ["compute", "memory", "collective"][
+        int(np.argmax([t_c, t_m, t_x]))]
+    mf = model_flops(arch, shape)
+    useful = mf / max(flops * nd, 1.0)
+    bound = max(t_c, t_m, t_x)
+    roofline_frac = t_c / bound if bound > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape, "n_devices": nd,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dominant, "model_flops": mf,
+        "useful_ratio": useful, "roofline_frac": roofline_frac,
+        "mem_gib": rec["memory"]["peak_estimate_bytes"] / 2 ** 30,
+    }
+
+
+def print_roofline_csv(mesh_tag: str = "pod16x16"):
+    rows = [roofline_row(r) for r in load_cells(mesh_tag)]
+    for r in rows:
+        derived = (f"compute_s={r['compute_s']:.3e};memory_s="
+                   f"{r['memory_s']:.3e};collective_s={r['collective_s']:.3e};"
+                   f"dominant={r['dominant']};useful={r['useful_ratio']:.2f};"
+                   f"roofline_frac={r['roofline_frac']:.2f}")
+        print(f"roofline_{r['arch']}_{r['shape']},0.0,{derived}")
+
+
+def markdown_table(mesh_tag: str = "pod16x16") -> str:
+    rows = [roofline_row(r) for r in load_cells(mesh_tag)]
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO | roofline frac | mem GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2f} | {r['mem_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

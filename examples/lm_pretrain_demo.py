@@ -1,0 +1,91 @@
+"""LM pre-training driver on the synthetic pipeline: the full training
+substrate end-to-end (model from the arch registry at reduced scale,
+AdamW + cosine schedule, microbatched train step, fault-tolerant loop
+with async checkpointing, straggler monitor).
+
+Default runs a ~8M-parameter qwen2.5-family config for 300 steps on CPU
+(loss drops ~2 nats on the templated synthetic stream).  --full selects
+a ~100M config (for real accelerators).
+
+  PYTHONPATH=src python examples/lm_pretrain_demo.py [--steps 300] [--full]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.registry import get_config
+from repro.data.synthetic_lm import SyntheticLM, SyntheticLMConfig
+from repro.dist.fault_tolerance import resilient_train_loop
+from repro.nn import transformer as T
+from repro.train.optimizer import adamw
+from repro.train.schedule import warmup_cosine
+from repro.train.step import build_train_step, init_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (accelerator-scale)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    base = get_config("qwen2.5-3b")
+    if args.full:
+        cfg = dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=32000, tie_embeddings=True,
+            scan_layers=True, remat=True, q_chunk=256, loss_chunks=4)
+    else:
+        cfg = dataclasses.replace(
+            base, n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+            head_dim=64, d_ff=1024, vocab_size=2048, tie_embeddings=True,
+            scan_layers=False, remat=False, q_chunk=128, loss_chunks=2,
+            compute_dtype=jnp.float32)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch family: {cfg.name} (reduced) — {n/1e6:.1f}M params")
+
+    sched = warmup_cosine(3e-3 if not args.full else 6e-4, 20, args.steps)
+    opt = adamw(lr=sched, weight_decay=0.01, grad_clip_norm=1.0)
+    step_fn = jax.jit(build_train_step(cfg, opt, num_microbatches=2))
+    state = init_state(params, opt)
+
+    data = SyntheticLM(SyntheticLMConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, seed=0))
+
+    losses = []
+    t0 = time.time()
+
+    def on_metrics(step, metrics):
+        losses.append(float(metrics["loss"]))
+        if step % 25 == 0:
+            tps = args.batch * args.seq * (step + 1) / (time.time() - t0)
+            print(f"step {step:4d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(sched(step)):.2e}  tok/s {tps:,.0f}")
+
+    ck = Checkpointer("experiments/ckpt_lm_demo", keep_last_k=2)
+    state, monitor, last = resilient_train_loop(
+        train_step=step_fn, state=state,
+        data_iter=lambda s: jax.tree.map(jnp.asarray, data.batch(s)),
+        checkpointer=ck, total_steps=args.steps, checkpoint_every=100,
+        on_metrics=on_metrics)
+
+    first = float(np.mean(losses[:10]))
+    final = float(np.mean(losses[-10:]))
+    print(f"\nloss {first:.3f} -> {final:.3f} over {last} steps "
+          f"({len(monitor.flagged)} straggler steps flagged)")
+    assert final < first, "training failed to reduce loss"
+    print(f"checkpoints under experiments/ckpt_lm_demo "
+          f"(latest step {ck.latest_step()})")
+
+
+if __name__ == "__main__":
+    main()

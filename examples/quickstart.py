@@ -1,0 +1,72 @@
+"""Quickstart: the paper's technique in 60 lines.
+
+Trains the paper's 62-30-10 MLP on (procedural) MNIST, quantizes it to
+signed-magnitude int8, and sweeps the 32 error-configurable MAC settings
+— printing the accuracy/power trade-off the paper's Figs 6/7 report.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import select_uniform_config
+from repro.core.power_model import network_improvement_pct, network_power_mw
+from repro.data.synthetic_mnist import load_mnist
+from repro.nn import mlp_paper as M
+from repro.train.optimizer import adamw, apply_updates
+
+
+def main():
+    print("== data ==")
+    data = load_mnist(n_train=6000, n_test=1500, seed=0)
+    print(f"source={data.source}, train={data.train_x.shape}, "
+          f"features=62 (paper's reduction)")
+
+    print("== float training ==")
+    params = M.init_params(jax.random.PRNGKey(0))
+    opt = adamw(lr=3e-3, weight_decay=1e-4)
+    state = opt.init(params)
+
+    def loss_fn(p, x, y):
+        lp = jax.nn.log_softmax(M.apply_float(p, x))
+        return -jnp.take_along_axis(lp, y[:, None], axis=1).mean()
+
+    @jax.jit
+    def step(p, s, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s, l
+
+    rng = np.random.default_rng(0)
+    for epoch in range(30):
+        idx = rng.permutation(len(data.train_x))
+        for i in range(0, len(idx) - 127, 128):
+            b = idx[i:i + 128]
+            params, state, l = step(params, state,
+                                    jnp.asarray(data.train_x[b]),
+                                    jnp.asarray(data.train_y[b]))
+    print(f"final loss {float(l):.4f}")
+
+    print("== quantize (signed-magnitude int8) ==")
+    qm = M.QuantizedMLP.from_float(params, data.train_x[:2000])
+
+    print("== error-config sweep (paper Figs 5-7) ==")
+    print(f"{'cfg':>4} {'accuracy':>9} {'power mW':>9} {'saving':>7}")
+    for cfg in (0, 1, 4, 8, 12, 16, 20, 24, 28, 31):
+        acc = qm.accuracy(data.test_x, data.test_y, cfg)
+        print(f"{cfg:4d} {acc*100:8.2f}% {network_power_mw(cfg):9.3f} "
+              f"{network_improvement_pct(cfg):6.2f}%")
+
+    print("== dynamic power control (1% accuracy budget) ==")
+    best, accs = select_uniform_config(
+        lambda c: qm.accuracy(data.test_x[:800], data.test_y[:800], c),
+        budget=0.01)
+    print(f"controller selects cfg {best}: "
+          f"{network_power_mw(best):.2f} mW "
+          f"({network_improvement_pct(best):.2f}% saved), "
+          f"accuracy {accs[best]*100:.2f}% vs exact {accs[0]*100:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

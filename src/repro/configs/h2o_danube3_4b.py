@@ -1,0 +1,16 @@
+"""H2O-Danube3-4B [arXiv:2401.16818 family; unverified tier].
+
+24L (per assignment), d_model 3840, 32 heads (GQA kv=8, head_dim 120),
+d_ff 10240 SwiGLU, vocab 32000, llama+mistral mix with sliding-window
+attention (window 4096).  head_dim 120 is not 128-aligned — the Pallas
+kernel pads the head dim to 128 (see kernels/flash_attention).
+"""
+from repro.nn.transformer import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, head_dim=120,
+    d_ff=10240, vocab_size=32000,
+    pattern=("local",), window=4096, mlp="swiglu", act="silu",
+    rope_theta=10000.0,
+)

@@ -1,0 +1,3 @@
+"""Core contribution: error-configurable approximate MAC + power control."""
+from . import (approx_matmul, approx_multiplier, controller, error_metrics,
+               power_model, quantization)

@@ -1,0 +1,127 @@
+"""Approximate matrix multiplication built on the error-configurable multiplier.
+
+Three semantics, from bit-faithful to TPU-fast (see DESIGN.md §2):
+
+  1. ``approx_matmul_lut``  — product-level approximation via the
+     exhaustive 128x128 LUT of the hardware multiplier.  Bit-exact w.r.t.
+     the ASIC model; materializes the (..., M, K, N) product tensor, so
+     it is for oracle/small-model use (the paper's 62-30-10 MLP).
+  2. ``approx_matmul_operand`` — the TPU-native adaptation: operand-LSB
+     truncation (+gate) *before* an exact integer matmul.  MXU-friendly
+     (mask -> dot), jit/pjit-shardable, and exactly the semantics the
+     Pallas kernel in ``kernels/approx_mac`` implements.
+  3. ``quantized_matmul`` — config 0 path (exact int8 x int8 -> int32),
+     shared by both.
+
+All integer matmuls accumulate in int32 (the hardware accumulates 62
+14-bit products into 21 bits; int32 strictly contains that range — a
+property test asserts no overflow against the 21-bit model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .approx_multiplier import (CONFIG_TABLE, N_CONFIGS, config_params,
+                                exhaustive_products)
+from .quantization import QTensor, truncate_operand_lsb
+
+# ---------------------------------------------------------------------------
+# LUT path (bit-faithful oracle)
+# ---------------------------------------------------------------------------
+
+_LUT_CACHE: dict[int, np.ndarray] = {}
+
+
+def _lut(config: int) -> np.ndarray:
+    if config not in _LUT_CACHE:
+        _LUT_CACHE[config] = exhaustive_products(config).astype(np.int32)
+    return _LUT_CACHE[config]
+
+
+def approx_matmul_lut(a_q, b_q, config: int):
+    """Bit-exact approximate matmul on int8 values.
+
+    a_q: (..., M, K) int8, b_q: (K, N) int8 -> (..., M, N) int32.
+    Each scalar product is looked up in the hardware multiplier table;
+    signs handled by XOR (sign product), matching the paper MAC.
+    """
+    lut = jnp.asarray(_lut(config))
+    a = a_q.astype(jnp.int32)
+    b = b_q.astype(jnp.int32)
+    a_mag, a_sign = jnp.abs(a), jnp.sign(a)
+    b_mag, b_sign = jnp.abs(b), jnp.sign(b)
+    # (..., M, K, 1) x (K, N) -> (..., M, K, N)
+    prod_mag = lut[a_mag[..., :, :, None], b_mag[None, :, :]]
+    sign = a_sign[..., :, :, None] * b_sign[None, :, :]
+    return jnp.sum(prod_mag * sign, axis=-2)
+
+
+def approx_matmul_lut_np(a_q: np.ndarray, b_q: np.ndarray, config: int) -> np.ndarray:
+    """numpy twin (used by the cycle-level hardware simulator)."""
+    lut = _lut(config)
+    a = a_q.astype(np.int64)
+    b = b_q.astype(np.int64)
+    prod = lut[np.abs(a)[..., :, :, None], np.abs(b)[None, :, :]].astype(np.int64)
+    sign = np.sign(a)[..., :, :, None] * np.sign(b)[None, :, :]
+    return (prod * sign).sum(axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Operand-truncation path (TPU-native)
+# ---------------------------------------------------------------------------
+
+def approx_matmul_operand(a_q, b_q, config: int,
+                          preferred_element_type=jnp.int32):
+    """Operand-LSB-truncated exact matmul — the MXU-executable adaptation.
+
+    a_q: (..., M, K) int8, b_q: (K, N) int8 -> int32.  The (mode, depth,
+    gate) of `config` maps to per-operand truncation: ROUND/COMP modes use
+    round-to-nearest, TRUNC/LOA floor.  depth is split across the two
+    operands (ceil on weights, floor on activations) so the product-level
+    error magnitude tracks the product-truncation model.
+    """
+    if config != 0:
+        mode, t, gate = config_params(config)
+        rtn = mode in (1, 2)
+        t_a = t // 2
+        t_b = t - t_a
+        a_q = truncate_operand_lsb(a_q, t_a, gate, rtn)
+        b_q = truncate_operand_lsb(b_q, t_b, gate, rtn)
+    return jax.lax.dot_general(
+        a_q, b_q,
+        dimension_numbers=(((a_q.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=preferred_element_type)
+
+
+def quantized_matmul(a_q, b_q, preferred_element_type=jnp.int32):
+    """Exact int8 matmul with int32 accumulation (config 0)."""
+    return approx_matmul_operand(a_q, b_q, 0, preferred_element_type)
+
+
+# ---------------------------------------------------------------------------
+# Float-facing layer op
+# ---------------------------------------------------------------------------
+
+def approx_dense(x, w_qt: QTensor, config: int, *, method: str = "operand"):
+    """y = approx(x) @ w for float activations and a pre-quantized weight.
+
+    Activations are dynamically quantized per-tensor; the integer result
+    is rescaled back to f32.  `method` in {"operand", "lut"}.
+    """
+    from .quantization import quantize
+    x_qt = quantize(x)
+    if method == "lut":
+        acc = approx_matmul_lut(x_qt.values, w_qt.values, config)
+    else:
+        acc = approx_matmul_operand(x_qt.values, w_qt.values, config)
+    w_scale = w_qt.scale if w_qt.axis is None else w_qt.scale[None, :]
+    return acc.astype(jnp.float32) * x_qt.scale * w_scale
+
+
+N_APPROX_CONFIGS = N_CONFIGS
+__all__ = [
+    "approx_matmul_lut", "approx_matmul_lut_np", "approx_matmul_operand",
+    "quantized_matmul", "approx_dense", "CONFIG_TABLE", "N_APPROX_CONFIGS",
+]

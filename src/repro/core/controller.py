@@ -1,0 +1,134 @@
+"""Dynamic power control — runtime selection of error configurations.
+
+The paper's controller selects one of 32 MAC configurations at runtime to
+trade accuracy for power.  We provide that knob plus its generalization
+to deep networks:
+
+  * ``select_uniform_config`` — the paper's policy: one global config,
+    the most power-saving one whose measured accuracy drop stays within
+    budget (evaluated on calibration data).
+  * ``DynamicPowerController`` — per-layer allocation for multi-layer
+    models: measures per-layer sensitivity (loss increase when only that
+    layer is approximated), then greedily assigns deeper approximation to
+    the least sensitive layers until the additive estimated degradation
+    meets the budget.  This is the "dynamic power control" feature made
+    first-class for the 10 assigned architectures: any layer built on
+    ``approx_dense``/``approx_matmul_operand`` accepts a per-layer config.
+
+Sensitivities are additive-first-order estimates; the controller
+re-validates the final assignment end-to-end and backs off (lowers the
+most aggressive layer) until the true degradation fits the budget.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .power_model import MAC_SAVING_FRAC, N_CONFIGS
+
+
+def select_uniform_config(eval_fn: Callable[[int], float],
+                          budget: float,
+                          configs: Sequence[int] = tuple(range(N_CONFIGS))
+                          ) -> tuple[int, dict[int, float]]:
+    """Paper policy: max-saving config whose accuracy drop <= budget.
+
+    eval_fn(config) -> accuracy in [0,1].  Returns (config, {cfg: acc}).
+    Configs are ordered by saving already (CONFIG_TABLE invariant)."""
+    acc = {c: float(eval_fn(c)) for c in configs}
+    base = acc[0]
+    best = 0
+    for c in configs:
+        if base - acc[c] <= budget and MAC_SAVING_FRAC[c] >= MAC_SAVING_FRAC[best]:
+            best = c
+    return best, acc
+
+
+@dataclass
+class LayerSensitivity:
+    layer: str
+    config: int
+    loss_delta: float
+    saving: float
+
+
+class DynamicPowerController:
+    """Greedy per-layer error-config allocator.
+
+    loss_fn(assignment: dict[layer, config]) -> scalar loss (lower=better)
+    layers: names of approximable layers.
+    probe_configs: subset of configs to measure per layer (keeps the
+    calibration pass cheap; savings for other configs are interpolated
+    from MAC_SAVING_FRAC ordering).
+    """
+
+    def __init__(self, layers: Sequence[str],
+                 loss_fn: Callable[[dict], float],
+                 probe_configs: Sequence[int] = (8, 16, 24, 31)):
+        self.layers = list(layers)
+        self.loss_fn = loss_fn
+        self.probe_configs = [c for c in probe_configs if 1 <= c < N_CONFIGS]
+        self.base_loss: float | None = None
+        self.sensitivity: list[LayerSensitivity] = []
+
+    def calibrate(self) -> None:
+        exact = {l: 0 for l in self.layers}
+        self.base_loss = float(self.loss_fn(exact))
+        self.sensitivity = []
+        for layer in self.layers:
+            for cfg in self.probe_configs:
+                assignment = dict(exact)
+                assignment[layer] = cfg
+                delta = float(self.loss_fn(assignment)) - self.base_loss
+                self.sensitivity.append(LayerSensitivity(
+                    layer=layer, config=cfg, loss_delta=delta,
+                    saving=float(MAC_SAVING_FRAC[cfg])))
+
+    def allocate(self, loss_budget: float, validate: bool = True
+                 ) -> dict[str, int]:
+        """Assign configs maximizing total saving s.t. sum(loss_delta) <=
+        budget (greedy by saving/delta ratio), then optionally validate
+        end-to-end and back off the costliest layers."""
+        if self.base_loss is None:
+            self.calibrate()
+        assignment = {l: 0 for l in self.layers}
+        spent = 0.0
+        # candidate upgrades sorted by efficiency (saving per unit loss)
+        cands = sorted(self.sensitivity,
+                       key=lambda s: s.saving / max(s.loss_delta, 1e-9),
+                       reverse=True)
+        for cand in cands:
+            cur_cfg = assignment[cand.layer]
+            if MAC_SAVING_FRAC[cand.config] <= MAC_SAVING_FRAC[cur_cfg]:
+                continue
+            cur_delta = self._delta(cand.layer, cur_cfg)
+            extra = max(cand.loss_delta, 0.0) - max(cur_delta, 0.0)
+            if spent + extra <= loss_budget:
+                assignment[cand.layer] = cand.config
+                spent += extra
+        if validate:
+            while (float(self.loss_fn(assignment)) - self.base_loss
+                   > loss_budget):
+                worst = max((l for l in self.layers if assignment[l] > 0),
+                            key=lambda l: self._delta(l, assignment[l]),
+                            default=None)
+                if worst is None:
+                    break
+                assignment[worst] = 0
+        return assignment
+
+    def _delta(self, layer: str, config: int) -> float:
+        if config == 0:
+            return 0.0
+        for s in self.sensitivity:
+            if s.layer == layer and s.config == config:
+                return s.loss_delta
+        return 0.0
+
+    def total_saving(self, assignment: dict[str, int]) -> float:
+        """Mean per-layer MAC saving fraction of an assignment."""
+        if not assignment:
+            return 0.0
+        return float(np.mean([MAC_SAVING_FRAC[c] for c in assignment.values()]))

@@ -1,0 +1,128 @@
+"""Power/energy model of the error-configurable MAC, calibrated to the paper.
+
+The paper's measured endpoints (45 nm, 100 MHz, 1.1 V):
+
+  network power, exact mode (cfg 0) : 5.55 mW
+  network power, cfg 31             : 4.81 mW   (-13.33 %)
+  per-MAC max saving                : 44.36 %
+  per-neuron max saving             : 24.78 %
+  10 physical neurons
+
+From these the power split is implied (and hard-wired below):
+  MAC saving 44.36 % == neuron saving 24.78 %  =>  MAC / neuron = 0.5587
+  neuron saving 24.78 % == network saving 13.33 %  =>  neurons / network = 0.5379
+  =>  network 5.55 mW = neurons 2.9855 mW (10 x 298.55 uW)
+                       + other (controller, muxes, registers, memory IF) 2.5645 mW
+      neuron 298.55 uW = MAC 166.79 uW + activation/bias/saturation 131.76 uW
+
+Per-config MAC energy: switching energy of the multiplier array scales
+with the *active partial-product columns*; the operand gate disables the
+approximate path for small operands, so the expected saving scales with
+the gate probability under the uniform exhaustive input model (the same
+model the paper's Table I uses):
+
+  saving_frac(cfg) = P(both |operands| >= gate) * (t_eff / PROD_BITS) - mode_overhead
+
+normalized so cfg 31 hits exactly the paper's 44.36 % MAC saving.  The
+CONFIG_TABLE in approx_multiplier.py is *ordered* by this quantity, so
+power saving is monotone in config index (verified by a unit test).
+
+For the TPU-scale architectures we reuse the same per-MAC energy curve as
+a *relative* knob: `energy_per_mac_pj(cfg)` is reported per arch x shape
+in the benchmark harness (a TPU cannot realize per-MAC power, see
+DESIGN.md §2 — these numbers model the paper's ASIC executing the same
+GEMMs, i.e. the technique's headroom, not TPU wall power).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .approx_multiplier import CONFIG_TABLE, N_CONFIGS, PROD_BITS
+
+# --- paper-calibrated constants (mW unless noted) -------------------------
+NETWORK_POWER_EXACT_MW = 5.55
+NETWORK_POWER_MIN_MW = 4.81
+MAX_NETWORK_SAVING = 0.1333
+MAX_NEURON_SAVING = 0.2478
+MAX_MAC_SAVING = 0.4436
+N_PHYSICAL_NEURONS = 10
+
+NEURON_SHARE_OF_NETWORK = MAX_NETWORK_SAVING / MAX_NEURON_SAVING   # 0.5379
+MAC_SHARE_OF_NEURON = MAX_NEURON_SAVING / MAX_MAC_SAVING           # 0.5587
+
+NEURONS_POWER_MW = NETWORK_POWER_EXACT_MW * NEURON_SHARE_OF_NETWORK
+NEURON_POWER_MW = NEURONS_POWER_MW / N_PHYSICAL_NEURONS
+MAC_POWER_EXACT_MW = NEURON_POWER_MW * MAC_SHARE_OF_NEURON
+NEURON_OTHER_MW = NEURON_POWER_MW - MAC_POWER_EXACT_MW
+NETWORK_OTHER_MW = NETWORK_POWER_EXACT_MW - NEURONS_POWER_MW
+
+# energy of one exact 8x8 signed-magnitude MAC, derived from the
+# calibration: each physical neuron's MAC retires 1 op/cycle at 100 MHz,
+# so E = P_mac / f = 166.8 uW / 100 MHz = 1.668 pJ (45 nm, 1.1 V) — the
+# unit for the TPU-arch energy *reports* (relative knob, see docstring).
+PAPER_CLOCK_HZ = 100e6
+MAC_ENERGY_EXACT_PJ = MAC_POWER_EXACT_MW * 1e-3 / PAPER_CLOCK_HZ * 1e12
+
+_MODE_OVERHEAD = {0: 0.000, 1: 0.010, 2: 0.020, 3: 0.015}
+
+
+def _raw_saving(mode: int, t: int, gate: int) -> float:
+    p_gate = ((128 - gate) / 128.0) ** 2 if gate > 0 else 1.0
+    cols = min(t, 13) / PROD_BITS
+    return p_gate * cols - _MODE_OVERHEAD[mode]
+
+
+# normalize so config 31 (last table entry == max raw saving) hits 44.36%
+_RAW = np.array([0.0] + [_raw_saving(m, t, g) for (m, t, g) in CONFIG_TABLE])
+_SCALE = MAX_MAC_SAVING / _RAW.max()
+MAC_SAVING_FRAC = _RAW * _SCALE          # per-config fraction of MAC power saved
+
+
+def mac_saving(config: int) -> float:
+    """Fraction of MAC power saved at `config` (0 for exact mode)."""
+    return float(MAC_SAVING_FRAC[config])
+
+
+def mac_power_mw(config: int) -> float:
+    return MAC_POWER_EXACT_MW * (1.0 - mac_saving(config))
+
+
+def neuron_power_mw(config: int) -> float:
+    return NEURON_OTHER_MW + mac_power_mw(config)
+
+
+def network_power_mw(config: int) -> float:
+    """Total network power with all 10 neurons at `config` (paper Fig 6)."""
+    return NETWORK_OTHER_MW + N_PHYSICAL_NEURONS * neuron_power_mw(config)
+
+
+def network_improvement_pct(config: int) -> float:
+    """Paper Fig 5: % improvement vs exact mode."""
+    return 100.0 * (1.0 - network_power_mw(config) / NETWORK_POWER_EXACT_MW)
+
+
+def energy_per_mac_pj(config: int) -> float:
+    return MAC_ENERGY_EXACT_PJ * (1.0 - mac_saving(config))
+
+
+@dataclass(frozen=True)
+class PowerReport:
+    config: int
+    mac_mw: float
+    neuron_mw: float
+    network_mw: float
+    improvement_pct: float
+
+
+def full_report() -> list[PowerReport]:
+    return [PowerReport(c, mac_power_mw(c), neuron_power_mw(c),
+                        network_power_mw(c), network_improvement_pct(c))
+            for c in range(N_CONFIGS)]
+
+
+def model_energy_mj(n_macs: float, config: int) -> float:
+    """Modeled energy (millijoules) for `n_macs` MACs at `config` —
+    used by the LM-arch energy reports (6*N*D-scale MAC counts)."""
+    return n_macs * energy_per_mac_pj(config) * 1e-9

@@ -1,0 +1,133 @@
+"""Signed-magnitude 8-bit quantization (paper Section III-A).
+
+The paper represents inputs, weights and biases as 1 sign bit + 7-bit
+magnitude.  Numerically that is symmetric int8 in [-127, 127] (note: -128
+is unrepresentable in signed magnitude — we clip to +/-127, which also
+keeps the quantizer symmetric).
+
+Two layers of API:
+
+  * array-level:  quantize / dequantize with per-tensor or per-channel
+    scales (symmetric, scale = max|x| / 127).
+  * ``QTensor``:  a small pytree-compatible container used by the model
+    layers and the Pallas kernel wrapper.
+
+``fake_quant`` provides the straight-through estimator used for
+quantization-aware fine-tuning.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QMAX = 127
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QTensor:
+    """int8 values + float scale; scale broadcasts along `axis`."""
+    values: Any          # int8 array
+    scale: Any           # f32 scalar or per-channel vector
+    axis: int | None = None   # channel axis of `scale` (None = per-tensor)
+
+    def dequantize(self):
+        scale = self.scale
+        if self.axis is not None:
+            shape = [1] * self.values.ndim
+            shape[self.axis] = -1
+            scale = jnp.reshape(scale, shape)
+        return self.values.astype(jnp.float32) * scale
+
+    @property
+    def magnitudes(self):
+        return jnp.abs(self.values.astype(jnp.int32))
+
+    def tree_flatten(self):
+        return (self.values, self.scale), (self.axis,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+def compute_scale(x, axis: int | None = None, eps: float = 1e-12):
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes)
+    return jnp.maximum(amax, eps) / QMAX
+
+
+def quantize(x, axis: int | None = None) -> QTensor:
+    scale = compute_scale(x, axis)
+    if axis is None:
+        q = jnp.round(x / scale)
+    else:
+        shape = [1] * x.ndim
+        shape[axis] = -1
+        q = jnp.round(x / jnp.reshape(scale, shape))
+    q = jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+    return QTensor(q, scale.astype(jnp.float32), axis)
+
+
+def quantize_np(x: np.ndarray, axis: int | None = None):
+    """numpy twin used by the oracle / hw simulator (no jax involved)."""
+    if axis is None:
+        amax = np.abs(x).max()
+        scale = max(amax, 1e-12) / QMAX
+        q = np.clip(np.round(x / scale), -QMAX, QMAX).astype(np.int8)
+        return q, np.float32(scale)
+    reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+    amax = np.abs(x).max(axis=reduce_axes)
+    scale = np.maximum(amax, 1e-12) / QMAX
+    shape = [1] * x.ndim
+    shape[axis] = -1
+    q = np.clip(np.round(x / scale.reshape(shape)), -QMAX, QMAX).astype(np.int8)
+    return q, scale.astype(np.float32)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x, axis: int | None = None):
+    """Quantize+dequantize with a straight-through gradient (QAT)."""
+    return quantize(x, axis).dequantize()
+
+
+def _fq_fwd(x, axis):
+    return fake_quant(x, axis), None
+
+
+def _fq_bwd(axis, _, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def truncate_operand_lsb(q_values, depth: int, gate: int, round_to_nearest: bool = True):
+    """TPU-native adaptation of the error-config knob (DESIGN.md §2).
+
+    Truncates `depth` low magnitude bits of int8 values whose magnitude is
+    >= `gate` (per-operand gating; pair-gating is not expressible as an
+    elementwise pre-matmul transform).  Executable before an exact MXU
+    matmul.  round_to_nearest halves the expected truncation error.
+    """
+    if depth <= 0:
+        return q_values
+    v = q_values.astype(jnp.int32)
+    mag = jnp.abs(v)
+    sign = jnp.sign(v)
+    low_mask = (1 << depth) - 1
+    if round_to_nearest:
+        tmag = jnp.minimum((mag + (1 << (depth - 1))) & ~low_mask, QMAX)
+    else:
+        tmag = mag & ~low_mask
+    gated = mag >= gate if gate > 0 else jnp.ones_like(mag, dtype=bool)
+    new_mag = jnp.where(gated, tmag, mag)
+    return (sign * new_mag).astype(q_values.dtype)

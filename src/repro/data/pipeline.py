@@ -1,0 +1,74 @@
+"""Shard-aware prefetching pipeline around any batch source.
+
+``Prefetcher`` runs the (numpy-producing) data source in a daemon thread
+with a bounded queue so host-side batch synthesis/IO overlaps the device
+step — the standard input-pipeline shape for accelerator training.  The
+device_put hook places each batch onto the mesh sharding when given
+(host-to-device transfer also overlaps).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+
+
+class Prefetcher:
+    def __init__(self, source: Callable[[int], Any], *, depth: int = 2,
+                 start_step: int = 0, place: Callable[[Any], Any] | None = None):
+        """source(step) -> batch pytree (numpy); place: e.g.
+        lambda b: jax.device_put(b, sharding_tree)."""
+        self.source = source
+        self.place = place or (lambda b: b)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._step = start_step
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                batch = self.source(step)
+            except Exception as e:            # surface errors to the consumer
+                self._q.put(e)
+                return
+            # block while the queue is full (bounded prefetch)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def get(self, timeout: float = 60.0):
+        item = self._q.get(timeout=timeout)
+        if isinstance(item, Exception):
+            raise item
+        step, batch = item
+        return step, self.place(batch)
+
+    def __iter__(self) -> Iterator:
+        while True:
+            yield self.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)
+
+
+def sharded_placer(sharding_tree):
+    """Batch placer moving host batches onto mesh shardings."""
+    def place(batch):
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), batch, sharding_tree)
+    return place

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: error-configurable int8 MAC matmul.
+
+The paper's MAC-array knob, adapted to the MXU (DESIGN.md §2): operand
+magnitudes are LSB-truncated (with optional round-to-nearest and an
+operand-magnitude gate) *inside the kernel*, then fed to exact int8
+dot_generals accumulating in an int32 VMEM scratch tile.  The truncation
+is a handful of VPU integer ops per element on tiles already resident in
+VMEM — the approximation costs no extra HBM traffic.
+
+Tiling: grid (M/bm, N/bn, K/bk), A tile (bm, bk) and B tile (bk, bn) in
+VMEM, int32 accumulator scratch (bm, bn).  bm = bn = 128 and bk = 256
+keep the MXU dims 128-aligned and the working set
+(128*256 + 256*128 int8 + 128*128 int32) = 128 KiB well inside VMEM;
+ops.py lets benchmarks sweep block shapes.
+
+The contraction (k) grid dimension is marked "arbitrary" so the
+accumulator carries across k-steps on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.approx_multiplier import config_params
+
+
+def _truncate(v, depth: int, gate: int, rtn: bool):
+    """Elementwise int8->int32 magnitude truncation (VPU ops only)."""
+    v = v.astype(jnp.int32)
+    if depth <= 0:
+        return v
+    mag = jnp.abs(v)
+    sign = jnp.sign(v)
+    low_mask = (1 << depth) - 1
+    if rtn:
+        tmag = jnp.minimum((mag + (1 << (depth - 1))) & ~low_mask, 127)
+    else:
+        tmag = mag & ~low_mask
+    if gate > 0:
+        tmag = jnp.where(mag >= gate, tmag, mag)
+    return sign * tmag
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, depth_a, depth_b, gate, rtn,
+            k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _truncate(a_ref[...], depth_a, gate, rtn)
+    b = _truncate(b_ref[...], depth_b, gate, rtn)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def approx_mac_matmul(a, b, config: int = 0, *, bm: int = 128,
+                      bn: int = 128, bk: int = 256,
+                      interpret: bool = False):
+    """a: (M, K) int8, b: (K, N) int8 -> (M, N) int32 under `config`.
+
+    Shapes must be pre-padded to tile multiples (ops.py handles padding).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (m, n, k, bm, bn, bk)
+    if config == 0:
+        depth_a = depth_b = gate = 0
+        rtn = False
+    else:
+        mode, t, gate = config_params(config)
+        rtn = mode in (1, 2)
+        depth_a = t // 2
+        depth_b = t - t // 2
+    k_steps = k // bk
+    kernel = functools.partial(_kernel, depth_a=depth_a, depth_b=depth_b,
+                               gate=gate, rtn=rtn, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ks: (i, ks)),
+            pl.BlockSpec((bk, bn), lambda i, j, ks: (ks, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ks: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,56 @@
+"""Jit-ready wrapper around the approx-MAC Pallas kernel.
+
+Handles padding to tile multiples, batching (leading dims flattened into
+M), dtype checks, and the interpret switch (CPU validation).  The f32
+scale handling (dynamic activation quantization) mirrors
+core.approx_matmul.approx_dense so models can switch `use_pallas` on
+without numeric drift.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .approx_mac import approx_mac_matmul
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@partial(jax.jit, static_argnames=("config", "bm", "bn", "bk", "interpret"))
+def approx_mac(a, b, config: int = 0, *, bm: int = 128, bn: int = 128,
+               bk: int = 256, interpret: bool = False):
+    """a: (..., M, K) int8; b: (K, N) int8 -> (..., M, N) int32."""
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8
+    lead = a.shape[:-2]
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
+    a2 = a.reshape((-1, k)) if lead else a
+    m_flat = a2.shape[0]
+    a2 = _pad_to(_pad_to(a2, bm, 0), bk, 1)
+    b2 = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    out = approx_mac_matmul(a2, b2, config, bm=bm, bn=bn, bk=bk,
+                            interpret=interpret)
+    out = out[:m_flat, :n]
+    return out.reshape(lead + (m, n)) if lead else out
+
+
+def approx_dense_pallas(x, w_q, w_scale, config: int = 0, *,
+                        interpret: bool = False,
+                        compute_dtype=jnp.bfloat16):
+    """Float-facing layer op on the kernel path: dynamic per-tensor int8
+    activation quantization -> kernel -> f32 rescale."""
+    from repro.core.quantization import quantize
+    x_qt = quantize(x.astype(jnp.float32))
+    acc = approx_mac(x_qt.values, w_q, config, interpret=interpret)
+    return (acc.astype(jnp.float32) * x_qt.scale * w_scale
+            ).astype(compute_dtype)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the approx-MAC kernel.
+
+Delegates to repro.core.approx_matmul.approx_matmul_operand — the
+TPU-adaptation semantics (operand truncation, depth split ceil-on-B,
+gate, round-to-nearest for ROUND/COMP modes) are defined exactly once in
+core and reused here, so the kernel is tested against the same function
+the model layers use.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.approx_matmul import approx_matmul_operand
+
+
+def approx_mac_matmul_ref(a, b, config: int = 0):
+    """a: (M, K) int8, b: (K, N) int8 -> (M, N) int32."""
+    return approx_matmul_operand(a, b, config,
+                                 preferred_element_type=jnp.int32)

@@ -1,0 +1,44 @@
+"""Jit wrapper for the flash-attention kernel: layout adaptation
+(B,S,H,hd model layout <-> B,H,S,hd kernel layout), head-dim padding to
+128 (h2o-danube hd=120), sequence padding to block multiples.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+
+def _pad_axis(x, mult, axis):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "logit_cap",
+                                   "scale", "bq", "bk", "interpret"))
+def flash_attn(q, k, v, *, causal: bool = True, window: int = 0,
+               logit_cap: float = 0.0, scale: float | None = None,
+               bq: int = 256, bk: int = 256, interpret: bool = False):
+    """Model layout: q (B, Sq, H, hd); k,v (B, Skv, KV, hd)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    scale = hd ** -0.5 if scale is None else scale   # scale on TRUE hd
+    bq_eff = min(bq, max(sq, 8))
+    bk_eff = min(bk, max(skv, 8))
+    qt = _pad_axis(_pad_axis(q.transpose(0, 2, 1, 3), 128, 3), bq_eff, 2)
+    kt = _pad_axis(_pad_axis(k.transpose(0, 2, 1, 3), 128, 3), bk_eff, 2)
+    vt = _pad_axis(_pad_axis(v.transpose(0, 2, 1, 3), 128, 3), bk_eff, 2)
+    # padded kv rows are masked inside the kernel via true_skv
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          logit_cap=logit_cap, scale=scale,
+                          bq=bq_eff, bk=bk_eff, interpret=interpret,
+                          true_sq=sq, true_skv=skv)
+    out = out[:, :, :sq, :hd].transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)

@@ -1,0 +1,367 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the
+# device count at first backend initialization.
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell
+on the production meshes and record memory / cost / collective stats.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Per cell this emits experiments/dryrun/<mesh>/<arch>__<shape>.json with:
+  bytes-per-device (arguments/outputs/temps), per-device HLO FLOPs and
+  bytes accessed, and the collective schedule (op counts + operand bytes
+  by collective kind) parsed from the partitioned HLO — the §Roofline
+  inputs.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import SHAPES, all_cells, cells_for, get_config
+from repro.dist.sharding import Mapping, activate, train_state_specs
+from repro.launch import mesh as mesh_lib
+from repro.launch.shapes import decode_inputs, token_inputs
+from repro.nn import transformer as T
+from repro.train import step as step_lib
+from repro.train.optimizer import adamw
+
+# per-arch microbatch counts for train_4k (activation-memory fit, DESIGN §5)
+MICROBATCHES = {
+    "gemma2-27b": 8, "qwen2.5-3b": 4, "h2o-danube-3-4b": 4, "gemma-7b": 4,
+    "olmoe-1b-7b": 8, "dbrx-132b": 16, "internvl2-76b": 16,
+    "whisper-large-v3": 4, "xlstm-350m": 2, "recurrentgemma-2b": 4,
+}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-operand bytes per collective kind (per-device HLO)."""
+    out: dict[str, dict] = {}
+    for type_str, op in _COLL_RE.findall(hlo_text):
+        d = out.setdefault(op, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += _shape_bytes(type_str)
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def runtime_config(arch: str, cell_name: str, dp_total: int):
+    """Apply production runtime settings to the published config."""
+    cfg = get_config(arch)
+    over = dict(scan_layers=True, remat=True, q_chunk=1024, loss_chunks=8)
+    cell = SHAPES[cell_name]
+    if cfg.n_experts:
+        over["moe_groups"] = dp_total
+        over["moe_ep"] = True            # §Perf iteration 3 (9.4x less coll)
+        if cell.step == "prefill":
+            over["moe_seq_chunks"] = 8   # bound the dispatch buffer
+    if cell.step != "train":
+        over["remat"] = False
+    return dataclasses.replace(cfg, **over)
+
+
+def _cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if s.dtype == jnp.float32 else s.dtype), tree)
+
+
+def probe_config(cfg, k_groups: int, with_rest: bool = False):
+    """Depth-reduced variant for HloCostAnalysis probes: XLA counts while
+    bodies once, so the production scan under-reports flops/bytes/
+    collectives by ~n_groups; two shallow probes (1 and 2 groups, with
+    attention chunks python-unrolled) let us extrapolate linearly:
+      total = P + G*delta (+ rest), delta = probe2 - probe1."""
+    npat = len(cfg.pattern)
+    n_layers = k_groups * npat + (cfg.remainder_layers() if with_rest else 0)
+    over = dict(n_layers=n_layers, unroll_chunks=True, loss_chunks=1,
+                scan_layers=False)
+    if cfg.encoder_decoder:
+        over["n_enc_layers"] = k_groups
+    return dataclasses.replace(cfg, **over)
+
+
+def lower_cell(arch: str, cell_name: str, mesh, *, serve_dtype=jnp.bfloat16,
+               fsdp: bool = True, save_hlo: str | None = None,
+               cfg_override=None, stats_only: bool = False,
+               nmb_override: int | None = None):
+    cell = SHAPES[cell_name]
+    multi = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi else ("data",)
+    dp_total = int(np.prod([mesh.shape[a] for a in batch_axes]))
+    cfg = cfg_override or runtime_config(arch, cell_name, dp_total)
+    if cell.global_batch % dp_total != 0 or cell.global_batch < dp_total:
+        batch_axes = ()          # long_500k: batch=1 -> replicate batch
+    kv_seq_axis = None
+    kv_hd_axis = None
+    tp_size = int(mesh.shape["model"])
+    if cell.step in ("decode", "prefill"):
+        if cell.step == "decode" and cell.global_batch < dp_total:
+            # long-context SP decode: KV sequence sharded over the DP axes
+            kv_seq_axis = ("pod", "data") if multi else ("data",)
+            cfg = dataclasses.replace(cfg, kv_onehot_write=True)
+        elif cfg.n_kv_heads % tp_size != 0:
+            # kv heads can't take the model axis -> shard the cache seq
+            # dim on it; single-token writes use the shard-local one-hot
+            # blend (plain DUS at a traced index makes GSPMD all-gather
+            # the cache every step) — §Perf iteration 1.  [A head-dim
+            # sharding variant was tried first and refuted: q stays
+            # head-sharded, so the partitioner re-gathers K/V anyway.]
+            kv_seq_axis = ("model",)
+            if cell.step == "decode":
+                cfg = dataclasses.replace(cfg, kv_onehot_write=True)
+    mapping = Mapping(mesh, fsdp=fsdp and cell.step == "train",
+                      batch_axes=batch_axes or (), kv_seq_axis=kv_seq_axis,
+                      kv_hd_axis=kv_hd_axis)
+
+    key = jax.random.key(0)
+    captured = {}
+
+    def initf():
+        p, s = T.init_lm(key, cfg)
+        captured["specs"] = s
+        return p
+
+    param_shapes = jax.eval_shape(initf)
+    param_specs = captured["specs"]
+
+    if cell.step != "train":
+        # weight-gathered serving: when the TP-sharded bf16 weights alone
+        # exceed half the HBM, also shard them over "data" (per-layer
+        # all-gather at use — §Perf iteration 2)
+        pbytes = sum(int(np.prod(s_.shape)) * 2
+                     for s_ in jax.tree.leaves(param_shapes))
+        if pbytes / int(mesh.shape["model"]) > 8 * 2 ** 30:
+            mapping.fsdp = True
+
+    t0 = time.time()
+    if cell.step == "train":
+        nmb = MICROBATCHES.get(arch, 1) if cell_name == "train_4k" else 1
+        if nmb_override is not None:
+            nmb = nmb_override
+        opt = adamw(lr=1e-4, weight_decay=0.01, grad_clip_norm=1.0)
+        state_shapes = jax.eval_shape(
+            lambda p: step_lib.init_state(p, opt), param_shapes)
+        state_specs = train_state_specs(param_specs)
+        state_sh = mapping.shardings(state_specs, state_shapes)
+        batch_shapes = token_inputs(cfg, cell)
+        batch_sh = mapping.batch_sharding(batch_shapes)
+        train_step = step_lib.build_train_step(cfg, opt, num_microbatches=nmb)
+        metrics_sh = jax.tree.map(lambda _: mapping.replicated(),
+                                  {"loss": 0, "grad_norm": 0, "step": 0})
+        fn = jax.jit(train_step,
+                     in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh),
+                     donate_argnums=(0,))
+        with mesh, activate(mapping):
+            lowered = fn.lower(state_shapes, batch_shapes)
+    elif cell.step == "prefill":
+        p_shapes = _cast_tree(param_shapes, serve_dtype)
+        p_sh = mapping.shardings(param_specs, p_shapes)
+        batch_shapes = token_inputs(cfg, cell)
+        batch_sh = mapping.batch_sharding(batch_shapes)
+
+        def prefill_fn(params, batch):
+            return T.prefill(params, cfg, batch["tokens"],
+                             vision_embeds=batch.get("vision_embeds"),
+                             enc_embeds=batch.get("enc_embeds"))
+
+        fn = jax.jit(prefill_fn, in_shardings=(p_sh, batch_sh))
+        with mesh, activate(mapping):
+            lowered = fn.lower(p_shapes, batch_shapes)
+    else:  # decode
+        p_shapes = _cast_tree(param_shapes, serve_dtype)
+        p_sh = mapping.shardings(param_specs, p_shapes)
+        cache_shapes, cache_specs, tok = decode_inputs(cfg, cell)
+        cache_sh = mapping.shardings(cache_specs, cache_shapes)
+        tok_sh = jax.tree.map(
+            lambda x: mapping.batch_sharding(x), tok)
+
+        def decode_fn(params, cache, token):
+            return T.decode_step(params, cfg, cache, token)
+
+        logits_sh = mapping.replicated()
+        fn = jax.jit(decode_fn, in_shardings=(p_sh, cache_sh, tok_sh),
+                     out_shardings=(logits_sh, cache_sh),
+                     donate_argnums=(1,))
+        with mesh, activate(mapping):
+            lowered = fn.lower(p_shapes, cache_shapes, tok)
+
+    lower_s = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    if stats_only:
+        return {"flops": cost.get("flops", 0.0),
+                "bytes": cost.get("bytes accessed", 0.0),
+                "collectives": colls}
+    if save_hlo:
+        import gzip
+        with gzip.open(save_hlo, "wt") as f:
+            f.write(hlo)
+    n_params = sum(int(np.prod(s.shape))
+                   for s in jax.tree.leaves(param_shapes))
+    # --- scan-corrected cost via depth-reduced probes -------------------
+    n_groups = cfg.n_groups()
+    rem = cfg.remainder_layers()
+    corrected = None
+    try:
+        p1 = lower_cell(arch, cell_name, mesh, serve_dtype=serve_dtype,
+                        fsdp=fsdp, cfg_override=probe_config(cfg, 1),
+                        stats_only=True, nmb_override=1)
+        p2 = lower_cell(arch, cell_name, mesh, serve_dtype=serve_dtype,
+                        fsdp=fsdp, cfg_override=probe_config(cfg, 2),
+                        stats_only=True, nmb_override=1)
+        rest_fl = rest_by = 0.0
+        rest_coll = {}
+        if rem:
+            p1r = lower_cell(arch, cell_name, mesh, serve_dtype=serve_dtype,
+                             fsdp=fsdp,
+                             cfg_override=probe_config(cfg, 1, with_rest=True),
+                             stats_only=True, nmb_override=1)
+            rest_fl = p1r["flops"] - p1["flops"]
+            rest_by = p1r["bytes"] - p1["bytes"]
+            rest_coll = {k: {kk: p1r["collectives"].get(k, {}).get(kk, 0)
+                             - p1["collectives"].get(k, {}).get(kk, 0)
+                             for kk in ("count", "bytes")}
+                         for k in set(p1r["collectives"]) | set(p1["collectives"])
+                         if k != "total_bytes"}
+
+        def comb(a1, a2, rest=0.0):
+            return a1 + (n_groups - 1) * (a2 - a1) + rest
+
+        coll_c = {}
+        kinds = (set(p1["collectives"]) | set(p2["collectives"])
+                 | set(rest_coll)) - {"total_bytes"}
+        for k in kinds:
+            c1 = p1["collectives"].get(k, {"count": 0, "bytes": 0})
+            c2 = p2["collectives"].get(k, {"count": 0, "bytes": 0})
+            r = rest_coll.get(k, {"count": 0, "bytes": 0})
+            coll_c[k] = {
+                "count": int(comb(c1["count"], c2["count"], r["count"])),
+                "bytes": int(comb(c1["bytes"], c2["bytes"], r["bytes"]))}
+        coll_c["total_bytes"] = sum(v["bytes"] for v in coll_c.values())
+        corrected = {
+            "flops_per_device": comb(p1["flops"], p2["flops"], rest_fl),
+            "bytes_per_device": comb(p1["bytes"], p2["bytes"], rest_by),
+            "collectives": coll_c,
+            "probe": {"p1_flops": p1["flops"], "p2_flops": p2["flops"],
+                      "n_groups": n_groups, "rest_layers": rem},
+        }
+    except Exception as e:   # probes are best-effort; record the failure
+        corrected = {"error": f"{type(e).__name__}: {e}"}
+
+    result = {
+        "arch": arch, "shape": cell_name,
+        "mesh": dict(zip(mesh.axis_names, [int(mesh.shape[a])
+                                           for a in mesh.axis_names])),
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "n_params": n_params,
+        "step": cell.step,
+        "lower_s": round(lower_s, 2), "compile_s": round(compile_s, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        "cost": {"flops_per_device": cost.get("flops", 0.0),
+                 "bytes_per_device": cost.get("bytes accessed", 0.0)},
+        "collectives": colls,
+        "corrected": corrected,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [False, True]
+    else:
+        meshes = [args.multi_pod]
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    for multi in meshes:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+        tag = "pod2x16x16" if multi else "pod16x16"
+        outdir = os.path.join(args.out, tag)
+        os.makedirs(outdir, exist_ok=True)
+        for arch, shape in cells:
+            if shape not in cells_for(arch):
+                continue
+            path = os.path.join(outdir, f"{arch}__{shape}.json")
+            hlo_path = (os.path.join(outdir, f"{arch}__{shape}.hlo.gz")
+                        if args.save_hlo else None)
+            print(f"[dryrun] {tag} {arch} x {shape} ...", flush=True)
+            try:
+                res = lower_cell(arch, shape, mesh, fsdp=not args.no_fsdp,
+                                 save_hlo=hlo_path)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                mm = res["memory"]["peak_estimate_bytes"] / 2**30
+                cf = res.get("corrected") or {}
+                print(f"  OK lower={res['lower_s']}s compile="
+                      f"{res['compile_s']}s mem/dev={mm:.2f}GiB "
+                      f"flops/dev={cf.get('flops_per_device', 0):.3g} "
+                      f"coll={cf.get('collectives', {}).get('total_bytes', 0):.3g}B",
+                      flush=True)
+            except Exception as e:
+                print(f"  FAIL {type(e).__name__}: {e}", flush=True)
+                with open(path + ".err", "w") as f:
+                    traceback.print_exc(file=f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving launcher: continuous-batching engine with the power knob.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      [--requests 8] [--max-batch 4] [--max-new 16] [--approx-cfg 0]
+
+Loads a checkpoint when --ckpt is given, otherwise serves random init
+(useful for shape/throughput validation).  --smoke selects the reduced
+config so the loop runs on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.nn import transformer as T
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--approx-cfg", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    if args.ckpt:
+        from repro.checkpoint.checkpointer import Checkpointer
+        ck = Checkpointer(args.ckpt)
+        state, _ = ck.restore({"params": params})
+        params = state["params"]
+        print(f"restored checkpoint step {ck.latest_step()}")
+
+    eng = Engine(params, cfg, max_batch=args.max_batch,
+                 max_len=args.max_len, approx_cfg=args.approx_cfg)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for rid in range(args.requests):
+        eng.submit(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab_size,
+                                         size=int(rng.integers(4, 24))),
+            max_new_tokens=args.max_new))
+    done = eng.run()
+    dt = time.time() - t0
+    total_new = sum(len(r.tokens) for r in done)
+    ttfts = [r.first_token_at - r.submitted_at for r in done]
+    print(f"{len(done)} requests, {total_new} tokens in {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s); "
+          f"TTFT p50 {np.median(ttfts)*1e3:.0f} ms")
+    rep = eng.energy_report()
+    print(f"approx_cfg={rep['approx_cfg']} modeled MAC energy "
+          f"{rep['modeled_mac_energy_j']*1e3:.2f} mJ "
+          f"(exact {rep['exact_mac_energy_j']*1e3:.2f} mJ, "
+          f"saving {rep['saving_frac']*100:.2f}%)")
+
+
+if __name__ == "__main__":
+    main()

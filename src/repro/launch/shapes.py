@@ -1,0 +1,59 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Modality frontends are STUBS per the assignment: whisper gets post-conv
+frame embeddings (B, S_enc, d); internvl2 gets patch embeddings
+(B, 1024, d).  Decoder length for whisper train/prefill cells is
+seq_len // 8 (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeCell
+from repro.nn.transformer import ModelConfig, init_cache
+
+SDS = jax.ShapeDtypeStruct
+WHISPER_ENC_LEN_FOR_DECODE = 1536   # fixed encoder stub for decode cells
+
+
+def token_inputs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Inputs for train/prefill steps (no shardings attached)."""
+    b, s = cell.global_batch, cell.seq_len
+    bf16 = jnp.bfloat16
+    i32 = jnp.int32
+    if cfg.encoder_decoder:
+        dec = max(s // 8, 64)
+        d = {"enc_embeds": SDS((b, s, cfg.d_model), bf16),
+             "tokens": SDS((b, dec), i32)}
+        if cell.step == "train":
+            d["labels"] = SDS((b, dec), i32)
+        return d
+    if cfg.vision_prefix_len:
+        txt = s - cfg.vision_prefix_len
+        assert txt > 0
+        d = {"tokens": SDS((b, txt), i32),
+             "vision_embeds": SDS((b, cfg.vision_prefix_len, cfg.d_model),
+                                  bf16)}
+        if cell.step == "train":
+            d["labels"] = SDS((b, txt), i32)
+        return d
+    d = {"tokens": SDS((b, s), i32)}
+    if cell.step == "train":
+        d["labels"] = SDS((b, s), i32)
+    return d
+
+
+def decode_inputs(cfg: ModelConfig, cell: ShapeCell):
+    """(cache_shapes, cache_specs, token_shape) for decode cells."""
+    b, s = cell.global_batch, cell.seq_len
+    enc_len = WHISPER_ENC_LEN_FOR_DECODE if cfg.encoder_decoder else 0
+    captured = {}
+
+    def build():
+        cache, spec = init_cache(cfg, b, s, enc_len)
+        captured["spec"] = spec
+        return cache
+
+    cache_shapes = jax.eval_shape(build)
+    return cache_shapes, captured["spec"], SDS((b, 1), jnp.int32)

@@ -1,0 +1,334 @@
+"""Recurrent sequence-mixing blocks: RG-LRU (Griffin/RecurrentGemma) and
+xLSTM cells (mLSTM via decay-attention parallel form, sLSTM via scan).
+
+All recurrences expose two execution paths:
+  * train/prefill: full-sequence parallel (associative scan for RG-LRU,
+    chunked decay-attention for mLSTM, lax.scan for sLSTM);
+  * decode: O(1)-state single-step updates (the state is the "cache").
+
+The paper's approx-MAC knob applies to the in/out projections of these
+blocks (the recurrent updates themselves are elementwise/diagonal, not
+GEMMs — see DESIGN.md §4 inapplicability notes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import chunked_attention
+from .layers import dense
+
+SQRT2 = float(np.sqrt(2.0))
+RG_LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin eq. 5-7)
+# ---------------------------------------------------------------------------
+
+def rg_lru_init(rng, width: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    # Lambda init so a = sigmoid(lam)^c is uniform in [0.9, 0.999]^(1/c)
+    u = jax.random.uniform(k1, (width,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / RG_LRU_C) / (1 - u ** (1.0 / RG_LRU_C)))
+    return {
+        "lam": lam.astype(jnp.float32),
+        "w_a": (jax.random.normal(k2, (width, width)) / np.sqrt(width)
+                ).astype(jnp.float32),
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "w_x": (jax.random.normal(k3, (width, width)) / np.sqrt(width)
+                ).astype(jnp.float32),
+        "b_x": jnp.zeros((width,), jnp.float32),
+    }
+
+
+def rg_lru_scan(params, x, h0=None):
+    """x: (B, S, W) -> (y, h_last).  Diagonal linear recurrence
+    h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t), via associative scan."""
+    b, s, w = x.shape
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"] + params["b_a"])      # recurrence gate
+    i = jax.nn.sigmoid(xf @ params["w_x"] + params["b_x"])      # input gate
+    log_a = -RG_LRU_C * r * jax.nn.softplus(-params["lam"])     # log sigmoid(lam)^(c r)
+    a = jnp.exp(log_a)
+    gated_x = i * xf
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bterm = beta * gated_x
+    if h0 is not None:
+        # fold h0 into the first step: b_1 += a_1 * h0
+        bterm = bterm.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(params, x_t, h_prev):
+    """Single decode step. x_t: (B, W); h_prev: (B, W)."""
+    xf = x_t.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(xf @ params["w_x"] + params["b_x"])
+    log_a = -RG_LRU_C * r * jax.nn.softplus(-params["lam"])
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * h_prev.astype(jnp.float32) + beta * (i * xf)
+    return h.astype(x_t.dtype), h
+
+
+def recurrent_block_init(rng, d_model: int, width: int, conv_width: int = 4):
+    ks = jax.random.split(rng, 5)
+    return {
+        "w_in_rec": dense_like(ks[0], d_model, width),
+        "w_in_gate": dense_like(ks[1], d_model, width),
+        "conv_w": (jax.random.normal(ks[2], (conv_width, width)) * 0.02
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((width,), jnp.float32),
+        "lru": rg_lru_init(ks[3], width),
+        "w_out": dense_like(ks[4], width, d_model),
+    }
+
+
+def dense_like(rng, d_in, d_out):
+    return (jax.random.normal(rng, (d_in, d_out)) / np.sqrt(d_in)
+            ).astype(jnp.float32)
+
+
+def causal_conv1d(x, w, b):
+    """x: (B,S,W); w: (K,W) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def causal_conv1d_step(x_t, conv_state, w, b):
+    """x_t: (B,W); conv_state: (B,K-1,W) past inputs (oldest first)."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,W)
+    out = jnp.einsum("bkw,kw->bw", window, w) + b
+    return out, window[:, 1:]
+
+
+def recurrent_block(params, x, *, approx_cfg: int = 0, state=None,
+                    decode: bool = False):
+    """Griffin recurrent block: gate branch * (conv -> RG-LRU) branch.
+    state (decode): {"h": (B,W), "conv": (B,K-1,W)}."""
+    gate = jax.nn.gelu(dense(x, params["w_in_gate"], approx_cfg=approx_cfg))
+    rec = dense(x, params["w_in_rec"], approx_cfg=approx_cfg)
+    if decode:
+        x_t = rec[:, 0]
+        c_out, conv_state = causal_conv1d_step(
+            x_t.astype(jnp.float32), state["conv"],
+            params["conv_w"], params["conv_b"])
+        h_out, h = rg_lru_step(params["lru"], c_out, state["h"])
+        y = h_out[:, None, :].astype(x.dtype)
+        new_state = {"h": h, "conv": conv_state}
+    else:
+        c_out = causal_conv1d(rec.astype(jnp.float32), params["conv_w"],
+                              params["conv_b"])
+        y, h_last = rg_lru_scan(params["lru"], c_out.astype(x.dtype))
+        k = params["conv_w"].shape[0]
+        new_state = {"h": h_last,
+                     "conv": rec.astype(jnp.float32)[:, -(k - 1):, :]}
+    out = dense((y * gate).astype(x.dtype), params["w_out"],
+                approx_cfg=approx_cfg)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix memory; parallel form == decay attention
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(rng, d_model: int, n_heads: int, proj_factor: float = 2.0):
+    d_inner = int(d_model * proj_factor)
+    hd = d_inner // n_heads
+    ks = jax.random.split(rng, 8)
+    return {
+        "w_up": dense_like(ks[0], d_model, d_inner),
+        "w_gate": dense_like(ks[1], d_model, d_inner),
+        "w_q": dense_like(ks[2], d_inner, d_inner),
+        "w_k": dense_like(ks[3], d_inner, d_inner),
+        "w_v": dense_like(ks[4], d_inner, d_inner),
+        "w_if": dense_like(ks[5], d_inner, 2 * n_heads),   # input+forget gates
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,)),
+                                 jnp.ones((n_heads,)) * 3.0]).astype(jnp.float32),
+        "ln_scale": jnp.ones((d_inner,), jnp.float32),
+        "w_down": dense_like(ks[6], d_inner, d_model),
+    }
+
+
+def mlstm_parallel(params, x, n_heads: int, *, approx_cfg: int = 0,
+                   q_chunk: int = 1024, unroll: bool = False):
+    """x: (B,S,D) -> (B,S,D) via the stabilized parallel form."""
+    nh = n_heads
+    b, s, _ = x.shape
+    up = dense(x, params["w_up"], approx_cfg=approx_cfg)
+    gate = jax.nn.silu(dense(x, params["w_gate"], approx_cfg=approx_cfg))
+    d_inner = up.shape[-1]
+    hd = d_inner // nh
+    q = dense(up, params["w_q"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
+    k = dense(up, params["w_k"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
+    v = dense(up, params["w_v"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
+    if_gates = (up.astype(jnp.float32) @ params["w_if"] + params["b_if"])
+    log_i = if_gates[..., :nh]                               # pre-activation
+    log_f = jax.nn.log_sigmoid(if_gates[..., nh:])           # (B,S,H)
+    log_fcum = jnp.cumsum(log_f, axis=1)
+    h = chunked_attention(q, k, v, causal=True, q_chunk=min(q_chunk, s),
+                          decay={"log_fcum": log_fcum, "log_i": log_i},
+                          unroll=unroll)
+    h = h.reshape(b, s, d_inner)
+    from .layers import rmsnorm
+    h = rmsnorm(h, params["ln_scale"] - 1.0)                 # scale offset=1
+    out = dense((h * gate).astype(x.dtype), params["w_down"],
+                approx_cfg=approx_cfg)
+    return out
+
+
+def mlstm_final_state(params, x, n_heads: int, *, approx_cfg: int = 0):
+    """Materialize the recurrent state (C,n,m) after consuming x —
+    needed to continue decoding after a parallel-form prefill.
+
+    Telescoping the recurrence: m_S = max_j w_j with
+    w_j = sum_{l=j+1..S} log_f_l + log_i_j, and
+    C_S = sum_j exp(w_j - m_S) k_j v_j^T,  n_S = sum_j exp(w_j - m_S) k_j.
+    """
+    nh = n_heads
+    b, s, _ = x.shape
+    up = dense(x, params["w_up"], approx_cfg=approx_cfg)
+    d_inner = up.shape[-1]
+    hd = d_inner // nh
+    k = dense(up, params["w_k"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
+    v = dense(up, params["w_v"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
+    if_g = (up.astype(jnp.float32) @ params["w_if"] + params["b_if"])
+    log_i = if_g[..., :nh]
+    log_f = jax.nn.log_sigmoid(if_g[..., nh:])               # (B,S,H)
+    log_fcum = jnp.cumsum(log_f, axis=1)
+    w = log_fcum[:, -1:, :] - log_fcum + log_i               # (B,S,H)
+    m = jnp.max(w, axis=1)                                   # (B,H)
+    wexp = jnp.exp(w - m[:, None, :])                        # (B,S,H)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_state = jnp.einsum("bsh,bshi,bshj->bhij", wexp, kf, vf)
+    n_state = jnp.einsum("bsh,bshi->bhi", wexp, kf)
+    return {"C": c_state, "n": n_state, "m": m}
+
+
+def mlstm_step(params, x_t, state, n_heads: int, *, approx_cfg: int = 0):
+    """Decode step with matrix memory state {"C": (B,H,hd,hd),
+    "n": (B,H,hd), "m": (B,H)}.  x_t: (B,1,D)."""
+    nh = n_heads
+    b = x_t.shape[0]
+    up = dense(x_t[:, 0], params["w_up"], approx_cfg=approx_cfg)
+    gate = jax.nn.silu(dense(x_t[:, 0], params["w_gate"], approx_cfg=approx_cfg))
+    d_inner = up.shape[-1]
+    hd = d_inner // nh
+    q = dense(up, params["w_q"], approx_cfg=approx_cfg).reshape(b, nh, hd)
+    k = dense(up, params["w_k"], approx_cfg=approx_cfg).reshape(b, nh, hd)
+    v = dense(up, params["w_v"], approx_cfg=approx_cfg).reshape(b, nh, hd)
+    if_g = (up.astype(jnp.float32) @ params["w_if"] + params["b_if"])
+    log_i = if_g[..., :nh]
+    log_f = jax.nn.log_sigmoid(if_g[..., nh:])               # (B,H)
+    m_prev, c_prev, n_prev = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    f_sc = jnp.exp(log_f + m_prev - m_new)[..., None, None]
+    i_sc = jnp.exp(log_i - m_new)[..., None, None]
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    c_new = f_sc * c_prev + i_sc * (kf[..., :, None] * vf[..., None, :])
+    n_new = f_sc[..., 0] * n_prev + i_sc[..., 0] * kf
+    num = jnp.einsum("bhij,bhi->bhj", c_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n_new, qf)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, d_inner)
+    from .layers import rmsnorm
+    h = rmsnorm(h, params["ln_scale"] - 1.0)
+    out = dense((h * gate).astype(x_t.dtype), params["w_down"],
+                approx_cfg=approx_cfg)
+    return out[:, None, :], {"C": c_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM): scalar memory with exponential gating + state mixing
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(rng, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    ks = jax.random.split(rng, 4)
+    w = (jax.random.normal(ks[0], (d_model, 4 * d_model)) / np.sqrt(d_model)
+         ).astype(jnp.float32)
+    r = (jax.random.normal(ks[1], (n_heads, hd, 4 * hd)) / np.sqrt(hd)
+         ).astype(jnp.float32)
+    return {
+        "w": w,                       # input projection for i,f,z,o
+        "r": r,                       # block-diagonal recurrent (per head)
+        "b": jnp.concatenate([jnp.zeros((d_model,)),
+                              jnp.ones((d_model,)),       # forget bias +1
+                              jnp.zeros((2 * d_model,))]).astype(jnp.float32),
+        "ln_scale": jnp.ones((d_model,), jnp.float32),
+        "w_up": dense_like(ks[2], d_model, int(d_model * 4 / 3)),
+        "w_gate": dense_like(ks[2], d_model, int(d_model * 4 / 3)),
+        "w_down": dense_like(ks[3], int(d_model * 4 / 3), d_model),
+    }
+
+
+def _slstm_cell(params, wx_t, carry, n_heads: int):
+    """One timestep. wx_t: (B, 4D) precomputed W@x; carry: h,c,n,m (B,D)."""
+    nh = n_heads
+    h, c, n, m = carry
+    b_sz, d = h.shape
+    hd = d // nh
+    hh = h.reshape(b_sz, nh, hd)
+    rec = jnp.einsum("bnh,nhk->bnk", hh, params["r"])      # (B,nh,4hd)
+    rec = rec.reshape(b_sz, nh, 4, hd).transpose(0, 2, 1, 3).reshape(b_sz, 4 * d)
+    pre = wx_t + rec + params["b"]
+    i_p, f_p, z_p, o_p = jnp.split(pre, 4, axis=-1)
+    log_i = i_p
+    log_f = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_scan(params, x, n_heads: int, *, approx_cfg: int = 0,
+               state=None):
+    """x: (B,S,D) -> (B,S,D); sequential lax.scan over time."""
+    b, s, d = x.shape
+    wx = dense(x, params["w"], approx_cfg=approx_cfg).astype(jnp.float32)
+    # reorder to (i,f,z,o) blocks of size D each — init is already blocked
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        carry = (zeros, zeros, zeros, zeros - 30.0)
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+
+    def step(carry, wx_t):
+        new = _slstm_cell(params, wx_t, carry, n_heads)
+        return new, new[0]
+
+    carry, hs = jax.lax.scan(step, carry, wx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)                                # (B,S,D)
+    from .layers import rmsnorm
+    h = rmsnorm(h.astype(x.dtype), params["ln_scale"] - 1.0)
+    up = jax.nn.silu(dense(h, params["w_gate"], approx_cfg=approx_cfg)) \
+        * dense(h, params["w_up"], approx_cfg=approx_cfg)
+    out = dense(up, params["w_down"], approx_cfg=approx_cfg)
+    new_state = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+    return out, new_state
+
+
+def slstm_step(params, x_t, state, n_heads: int, *, approx_cfg: int = 0):
+    """Decode step; x_t: (B,1,D)."""
+    out, new_state = slstm_scan(params, x_t, n_heads, approx_cfg=approx_cfg,
+                                state=state)
+    return out, new_state

@@ -1,0 +1,978 @@
+"""Composable LM assembly covering all 10 assigned architectures.
+
+One ``ModelConfig`` describes dense / MoE / VLM / enc-dec / SSM / hybrid
+variants through a layer `pattern` (cycled over the depth):
+
+  "global"     full causal attention          (all dense/MoE archs)
+  "local"      sliding-window causal attention (gemma2, danube3, griffin)
+  "recurrent"  Griffin RG-LRU block            (recurrentgemma)
+  "mlstm"      xLSTM matrix-memory block
+  "slstm"      xLSTM scalar-memory block
+
+Parameters are plain nested dicts.  Layers are grouped by one pattern
+period and scanned with ``jax.lax.scan`` (config.scan_layers) so the HLO
+stays small at 132 B scale; every init function also returns a parallel
+*logical sharding spec* tree (tuples of logical axis names per dim) that
+``dist/sharding.py`` maps onto the mesh (TP on "model", FSDP on "data").
+
+Three lowerable entry points per architecture:
+  * ``forward``        — full-sequence activations (training / prefill)
+  * ``prefill``        — forward + KV/state cache construction
+  * ``decode_step``    — one token against the cache
+
+The paper's error-config knob threads through every GEMM via
+``approx_cfg`` (0 = exact float path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import quantize
+from .attention import chunked_attention, decode_attention
+from .layers import ACT, dense, dense_init, embed_init, layernorm, rmsnorm, softcap
+from .moe import moe_ffn
+from .recurrent import (mlstm_block_init, mlstm_parallel, mlstm_step,
+                        recurrent_block, recurrent_block_init,
+                        slstm_block_init, slstm_scan, slstm_step)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | vlm | audio | ssm | hybrid
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    pattern: tuple[str, ...] = ("global",)
+    window: int = 0                      # sliding window for "local"
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    mlp: str = "swiglu"                  # swiglu | geglu | gelu | none
+    act: str = "silu"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    query_scale: float | None = None     # None -> head_dim**-0.5
+    norm: str = "rms"                    # rms | ln
+    post_norm: bool = False              # gemma2 extra post-norms
+    embed_scale: bool = False            # gemma multiplies embed by sqrt(d)
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    renormalize: bool = True
+    moe_groups: int = 1                  # dispatch groups (align with DP shards)
+    moe_seq_chunks: int = 1              # sequential MoE sub-chunks (prefill)
+    moe_ep: bool = False                 # expert-parallel (E over "model")
+                                         # instead of TP on d_ff
+    # enc-dec (whisper)
+    encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_frame_dim: int = 0               # stub frontend embedding dim == d_model
+    max_positions: int = 8192            # learned pos-emb table (ln norm archs)
+    # VLM
+    vision_prefix_len: int = 0
+    # recurrent
+    lru_width: int = 0
+    mlstm_proj_factor: float = 2.0
+    # runtime/execution
+    scan_layers: bool = True
+    remat: bool = True
+    remat_policy: str = "nothing"        # nothing | dots
+    q_chunk: int = 1024
+    compute_dtype: Any = jnp.bfloat16
+    kv_quant: bool = False               # int8 KV cache
+    kv_onehot_write: bool = False        # shard-local cache write (decode
+                                         # with a sequence-sharded cache)
+    loss_chunks: int = 8                 # chunked vocab CE
+    unroll_chunks: bool = False          # dry-run cost-probe mode
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    def remainder_layers(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+    def layer_kinds(self) -> list[str]:
+        return [self.pattern[i % len(self.pattern)]
+                for i in range(self.n_layers)]
+
+    def smoke(self, **over) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        def down(v, lo, q=1):
+            return max(lo, int(v) // q)
+        base = dict(
+            n_layers=max(2 * len(self.pattern), 2),
+            d_model=64, n_heads=2,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads > 1 else 1,
+            head_dim=32, d_ff=128 if self.d_ff else 0, vocab_size=128,
+            window=min(self.window, 16) if self.window else 0,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            n_enc_layers=2 if self.encoder_decoder else 0,
+            vision_prefix_len=4 if self.vision_prefix_len else 0,
+            lru_width=64 if self.lru_width else 0,
+            moe_groups=1, scan_layers=False, remat=False,
+            q_chunk=8, loss_chunks=2, max_positions=128,
+            compute_dtype=jnp.float32,
+        )
+        base.update(over)
+        return dataclasses.replace(self, **base)
+
+
+# ---------------------------------------------------------------------------
+# per-block init (+ logical sharding specs)
+# ---------------------------------------------------------------------------
+# logical axes: "fsdp" (zero-3 over data), "tp" (tensor-parallel over
+# model), "tp?" (tp if divisible at mapping time else replicated),
+# "vocab" (== tp), None (replicated)
+
+def _norm_init(cfg):
+    if cfg.norm == "rms":
+        return {"scale": jnp.zeros((cfg.d_model,), jnp.float32)}, \
+               {"scale": (None,)}
+    return ({"scale": jnp.ones((cfg.d_model,), jnp.float32),
+             "bias": jnp.zeros((cfg.d_model,), jnp.float32)},
+            {"scale": (None,), "bias": (None,)})
+
+
+def _apply_norm(p, x, cfg):
+    if cfg.norm == "rms":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def _attn_init(rng, cfg, cross: bool = False):
+    ks = jax.random.split(rng, 5)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    std = 1.0 / np.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h, hd)) * std).astype(jnp.float32),
+        "wk": (jax.random.normal(ks[1], (d, kv, hd)) * std).astype(jnp.float32),
+        "wv": (jax.random.normal(ks[2], (d, kv, hd)) * std).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[3], (h, hd, d)) * std / np.sqrt(cfg.n_layers)
+               ).astype(jnp.float32),
+    }
+    s = {
+        "wq": ("fsdp", "tp?", None), "wk": ("fsdp", "tp?", None),
+        "wv": ("fsdp", "tp?", None), "wo": ("tp?", None, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kv, hd), jnp.float32)
+        s["bq"] = ("tp?", None)
+        s["bk"] = ("tp?", None)
+        s["bv"] = ("tp?", None)
+    return p, s
+
+
+def _mlp_init(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.n_experts > 0:
+        e = cfg.n_experts
+        std_in, std_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+        p = {"router": (jax.random.normal(ks[0], (d, e)) * std_in
+                        ).astype(jnp.float32),
+             "w_gate": (jax.random.normal(ks[1], (e, d, f)) * std_in
+                        ).astype(jnp.float32),
+             "w_up": (jax.random.normal(ks[1], (e, d, f)) * std_in
+                      ).astype(jnp.float32),
+             "w_down": (jax.random.normal(ks[2], (e, f, d)) * std_out
+                        ).astype(jnp.float32)}
+        if cfg.moe_ep and e % 8 == 0:
+            s = {"router": (None, None),
+                 "w_gate": ("expert", "fsdp", None),
+                 "w_up": ("expert", "fsdp", None),
+                 "w_down": ("expert", None, "fsdp")}
+        else:
+            s = {"router": (None, None),
+                 "w_gate": (None, "fsdp", "tp"), "w_up": (None, "fsdp", "tp"),
+                 "w_down": (None, "tp", "fsdp")}
+        return p, s
+    if cfg.mlp == "none" or f == 0:
+        return {}, {}
+    p = {"w_up": dense_init(ks[0], d, f),
+         "w_down": dense_init(ks[1], f, d, scale=1.0 / np.sqrt(f))}
+    s = {"w_up": ("fsdp", "tp"), "w_down": ("tp", "fsdp")}
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], d, f)
+        s["w_gate"] = ("fsdp", "tp")
+    return p, s
+
+
+def _block_init(rng, cfg, kind: str):
+    """One layer's params+specs for pattern element `kind`."""
+    ks = jax.random.split(rng, 6)
+    p, s = {}, {}
+    n1, sn1 = _norm_init(cfg)
+    p["norm1"], s["norm1"] = n1, sn1
+    if kind in ("global", "local"):
+        p["attn"], s["attn"] = _attn_init(ks[0], cfg)
+        if cfg.encoder_decoder:   # decoder blocks get cross-attn
+            p["norm_x"], s["norm_x"] = _norm_init(cfg)
+            p["xattn"], s["xattn"] = _attn_init(ks[1], cfg, cross=True)
+        n2, sn2 = _norm_init(cfg)
+        p["norm2"], s["norm2"] = n2, sn2
+        p["mlp"], s["mlp"] = _mlp_init(ks[2], cfg)
+        if cfg.post_norm:
+            p["post1"], s["post1"] = _norm_init(cfg)
+            p["post2"], s["post2"] = _norm_init(cfg)
+    elif kind == "recurrent":
+        p["rec"] = recurrent_block_init(ks[0], cfg.d_model, cfg.lru_width)
+        s["rec"] = {"w_in_rec": ("fsdp", "tp"), "w_in_gate": ("fsdp", "tp"),
+                    "conv_w": (None, "tp"), "conv_b": ("tp",),
+                    "lru": {"lam": ("tp",), "w_a": (None, "tp"),
+                            "b_a": ("tp",), "w_x": (None, "tp"),
+                            "b_x": ("tp",)},
+                    "w_out": ("tp", "fsdp")}
+        n2, sn2 = _norm_init(cfg)
+        p["norm2"], s["norm2"] = n2, sn2
+        p["mlp"], s["mlp"] = _mlp_init(ks[2], cfg)
+    elif kind == "mlstm":
+        p["cell"] = mlstm_block_init(ks[0], cfg.d_model, cfg.n_heads,
+                                     cfg.mlstm_proj_factor)
+        s["cell"] = {k: ("fsdp", "tp?") for k in
+                     ("w_up", "w_gate", "w_q", "w_k", "w_v", "w_if")}
+        s["cell"]["w_down"] = ("tp?", "fsdp")
+        s["cell"]["b_if"] = (None,)
+        s["cell"]["ln_scale"] = ("tp?",)
+    elif kind == "slstm":
+        p["cell"] = slstm_block_init(ks[0], cfg.d_model, cfg.n_heads)
+        s["cell"] = {"w": ("fsdp", "tp?"), "r": (None, None, None),
+                     "b": (None,), "ln_scale": (None,),
+                     "w_up": ("fsdp", "tp?"), "w_gate": ("fsdp", "tp?"),
+                     "w_down": ("tp?", "fsdp")}
+    else:
+        raise ValueError(kind)
+    return p, s
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_specs(spec, n):
+    """Prepend the scan ("layers") axis to every spec tuple."""
+    return jax.tree.map(lambda t: (None,) + tuple(t), spec,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+def init_lm(rng, cfg: ModelConfig):
+    """Returns (params, logical_specs)."""
+    ks = jax.random.split(rng, 8)
+    params: Params = {}
+    specs: Params = {}
+    params["embed"] = embed_init(ks[0], cfg.vocab_size, cfg.d_model)
+    specs["embed"] = ("vocab", "fsdp")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size)
+        specs["lm_head"] = ("fsdp", "vocab")
+
+    def make_blocks(rng, n_layers, pattern, dec=False):
+        kinds = [pattern[i % len(pattern)] for i in range(n_layers)]
+        npat = len(pattern)
+        n_groups, rem = n_layers // npat, n_layers % npat
+        rngs = jax.random.split(rng, n_layers)
+        bp, bs = {}, {}
+        if n_groups:
+            groups = []
+            gspec = None
+            for g in range(n_groups):
+                gp = {}
+                for j in range(npat):
+                    li = g * npat + j
+                    p, sp = _block_init(rngs[li], cfg, kinds[li])
+                    gp[f"b{j}"] = p
+                    if g == 0:
+                        gspec = gspec or {}
+                        gspec[f"b{j}"] = sp
+                groups.append(gp)
+            bp["scan"] = _stack(groups)
+            bs["scan"] = _stack_specs(gspec, n_groups)
+        for r in range(rem):
+            li = n_groups * npat + r
+            p, sp = _block_init(rngs[li], cfg, kinds[li])
+            bp[f"rest{r}"] = p
+            bs[f"rest{r}"] = sp
+        return bp, bs
+
+    params["blocks"], specs["blocks"] = make_blocks(ks[2], cfg.n_layers,
+                                                    cfg.pattern)
+    fn, fs = _norm_init(cfg)
+    params["final_norm"], specs["final_norm"] = fn, fs
+
+    if cfg.encoder_decoder:
+        # encoder: non-causal global attention blocks (no cross-attn)
+        enc_cfg = dataclasses.replace(cfg, encoder_decoder=False)
+        ep, es = {}, {}
+        kinds = ["global"] * cfg.n_enc_layers
+        rngs = jax.random.split(ks[3], cfg.n_enc_layers)
+        groups = [dict(b0=_block_init(rngs[g], enc_cfg, "global")[0])
+                  for g in range(cfg.n_enc_layers)]
+        gspec = {"b0": _block_init(rngs[0], enc_cfg, "global")[1]}
+        ep["scan"] = _stack(groups)
+        es["scan"] = _stack_specs(gspec, cfg.n_enc_layers)
+        params["encoder"], specs["encoder"] = ep, es
+        en, esn = _norm_init(cfg)
+        params["enc_norm"], specs["enc_norm"] = en, esn
+        params["enc_pos"] = (jax.random.normal(ks[4], (cfg.max_positions,
+                                                       cfg.d_model)) * 0.02
+                             ).astype(jnp.float32)
+        specs["enc_pos"] = (None, "fsdp")
+    if cfg.norm == "ln":   # whisper-style learned positions for the decoder
+        params["dec_pos"] = (jax.random.normal(ks[5], (cfg.max_positions,
+                                                       cfg.d_model)) * 0.02
+                             ).astype(jnp.float32)
+        specs["dec_pos"] = (None, "fsdp")
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# forward blocks
+# ---------------------------------------------------------------------------
+
+def _proj(x, w, approx_cfg=0, bias=None):
+    """x: (B,S,d) @ w: (d,H,hd) -> (B,S,H,hd) through the dense knob."""
+    d, h, hd = w.shape
+    y = dense(x, w.reshape(d, h * hd), approx_cfg=approx_cfg)
+    y = y.reshape(x.shape[:-1] + (h, hd))
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+def _attn_out(y, wo, approx_cfg=0):
+    h, hd, d = wo.shape
+    return dense(y.reshape(y.shape[:-2] + (h * hd,)), wo.reshape(h * hd, d),
+                 approx_cfg=approx_cfg)
+
+
+def _mlp_apply(p, x, cfg, approx_cfg=0):
+    if cfg.n_experts > 0:
+        b, s, d = x.shape
+        # decode (single position): dropless — a dropped token would halt
+        # generation quality; the buffer is tiny at s==1 anyway.
+        cf = float(cfg.n_experts) if s == 1 else cfg.capacity_factor
+        groups = cfg.moe_groups if (b * s) % cfg.moe_groups == 0 else 1
+        y, _ = moe_ffn(x.reshape(b * s, d), p, n_experts=cfg.n_experts,
+                       top_k=cfg.top_k, capacity_factor=cf,
+                       n_groups=groups, act=cfg.act,
+                       renormalize=cfg.renormalize, approx_cfg=approx_cfg,
+                       seq_chunks=cfg.moe_seq_chunks if s > 1 else 1,
+                       unroll_chunks=cfg.unroll_chunks, ep=cfg.moe_ep)
+        return y.reshape(b, s, d)
+    if not p:
+        return x
+    act = ACT["gelu" if cfg.mlp == "geglu" else cfg.act] \
+        if cfg.mlp in ("swiglu", "geglu") else ACT[cfg.act]
+    if "w_gate" in p:
+        h = act(dense(x, p["w_gate"], approx_cfg=approx_cfg)) \
+            * dense(x, p["w_up"], approx_cfg=approx_cfg)
+    else:
+        h = act(dense(x, p["w_up"], approx_cfg=approx_cfg))
+    return dense(h, p["w_down"], approx_cfg=approx_cfg)
+
+
+def _attention_block(p, x, cfg, kind, *, positions, approx_cfg=0,
+                     causal=True, enc_out=None):
+    from .layers import apply_rope
+    res = x
+    h = _apply_norm(p["norm1"], x, cfg)
+    q = _proj(h, p["attn"]["wq"], approx_cfg, p["attn"].get("bq"))
+    k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"))
+    v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"))
+    if cfg.norm == "rms":                      # rope archs
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    window = cfg.window if kind == "local" else 0
+    attn = chunked_attention(q, k, v, causal=causal, window=window,
+                             logit_cap=cfg.attn_softcap,
+                             scale=cfg.query_scale, q_chunk=cfg.q_chunk,
+                             unroll=cfg.unroll_chunks)
+    y = _attn_out(attn, p["attn"]["wo"], approx_cfg)
+    if cfg.post_norm:
+        y = _apply_norm(p["post1"], y, cfg)
+    x = res + y
+    if enc_out is not None and "xattn" in p:
+        res = x
+        h = _apply_norm(p["norm_x"], x, cfg)
+        q = _proj(h, p["xattn"]["wq"], approx_cfg)
+        k = _proj(enc_out, p["xattn"]["wk"], approx_cfg)
+        v = _proj(enc_out, p["xattn"]["wv"], approx_cfg)
+        attn = chunked_attention(q, k, v, causal=False,
+                                 q_chunk=cfg.q_chunk,
+                                 unroll=cfg.unroll_chunks)
+        x = res + _attn_out(attn, p["xattn"]["wo"], approx_cfg)
+    res = x
+    h = _apply_norm(p["norm2"], x, cfg)
+    y = _mlp_apply(p["mlp"], h, cfg, approx_cfg)
+    if cfg.post_norm:
+        y = _apply_norm(p["post2"], y, cfg)
+    return res + y
+
+
+def _apply_block(p, kind, x, cfg, *, positions, approx_cfg=0, causal=True,
+                 enc_out=None):
+    if kind in ("global", "local"):
+        return _attention_block(p, x, cfg, kind, positions=positions,
+                                approx_cfg=approx_cfg, causal=causal,
+                                enc_out=enc_out)
+    if kind == "recurrent":
+        res = x
+        h = _apply_norm(p["norm1"], x, cfg)
+        y, _ = recurrent_block(p["rec"], h, approx_cfg=approx_cfg)
+        x = res + y
+        res = x
+        h = _apply_norm(p["norm2"], x, cfg)
+        return res + _mlp_apply(p["mlp"], h, cfg, approx_cfg)
+    if kind == "mlstm":
+        res = x
+        h = _apply_norm(p["norm1"], x, cfg)
+        return res + mlstm_parallel(p["cell"], h, cfg.n_heads,
+                                    approx_cfg=approx_cfg,
+                                    q_chunk=cfg.q_chunk,
+                                    unroll=cfg.unroll_chunks)
+    if kind == "slstm":
+        res = x
+        h = _apply_norm(p["norm1"], x, cfg)
+        y, _ = slstm_scan(p["cell"], h, cfg.n_heads, approx_cfg=approx_cfg)
+        return res + y
+    raise ValueError(kind)
+
+
+def _run_blocks(blocks, x, cfg, *, positions, approx_cfg=0, causal=True,
+                enc_out=None, pattern=None):
+    pattern = pattern or cfg.pattern
+    npat = len(pattern)
+
+    from repro.dist.sharding import lsc
+
+    def group_body(x, gp):
+        for j, kind in enumerate(pattern):
+            x = lsc(x, "batch", None, None)
+            x = _apply_block(gp[f"b{j}"], kind, x, cfg, positions=positions,
+                             approx_cfg=approx_cfg, causal=causal,
+                             enc_out=enc_out)
+        return x
+
+    if "scan" in blocks:
+        body = group_body
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(group_body, policy=policy)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(lambda c, gp: (body(c, gp), None),
+                                x, blocks["scan"])
+        else:
+            n_groups = jax.tree.leaves(blocks["scan"])[0].shape[0]
+            for g in range(n_groups):
+                gp = jax.tree.map(lambda a: a[g], blocks["scan"])
+                x = body(x, gp)
+    r = 0
+    while f"rest{r}" in blocks:
+        # rest layers follow n_groups*npat scanned layers, so their kind
+        # index reduces to r % npat
+        x = _apply_block(blocks[f"rest{r}"], pattern[r % npat], x, cfg,
+                         positions=positions, approx_cfg=approx_cfg,
+                         causal=causal, enc_out=enc_out)
+        r += 1
+    return x
+
+
+# ---------------------------------------------------------------------------
+# model-level entry points
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def encode(params, cfg, enc_embeds):
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    from repro.dist.sharding import lsc
+    enc_embeds = lsc(enc_embeds, "batch", None, None)
+    x = enc_embeds.astype(cfg.compute_dtype)
+    s = x.shape[1]
+    x = x + params["enc_pos"][:s][None].astype(x.dtype)
+    positions = jnp.arange(s)[None]
+    x = _run_blocks(params["encoder"], x, cfg, positions=positions,
+                    causal=False, pattern=("global",))
+    return _apply_norm(params["enc_norm"], x, cfg)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
+            enc_embeds=None, approx_cfg: int = 0):
+    """Full-sequence hidden states (B, S_total, d)."""
+    from repro.dist.sharding import lsc
+    tokens = lsc(tokens, "batch", None)
+    x = embed_tokens(params, cfg, tokens)
+    x = lsc(x, "batch", None, None)
+    if cfg.vision_prefix_len and vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    if cfg.norm == "ln":   # learned positions (whisper decoder)
+        x = x + params["dec_pos"][:x.shape[1]][None].astype(x.dtype)
+    enc_out = None
+    if cfg.encoder_decoder and enc_embeds is not None:
+        enc_out = encode(params, cfg, enc_embeds)
+    positions = jnp.arange(x.shape[1])[None]
+    x = _run_blocks(params["blocks"], x, cfg, positions=positions,
+                    approx_cfg=approx_cfg, causal=True, enc_out=enc_out)
+    return _apply_norm(params["final_norm"], x, cfg)
+
+
+def logits_for(params, cfg, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(hidden, w.astype(hidden.dtype))
+    if cfg.final_softcap > 0:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, approx_cfg: int = 0):
+    """Chunked-vocab cross entropy.  batch: tokens/labels (+ stubs).
+    labels == -1 are masked (vision prefix positions etc.)."""
+    hidden = forward(params, cfg, batch["tokens"],
+                     vision_embeds=batch.get("vision_embeds"),
+                     enc_embeds=batch.get("enc_embeds"),
+                     approx_cfg=approx_cfg)
+    labels = batch["labels"]
+    if cfg.vision_prefix_len and batch.get("vision_embeds") is not None:
+        pad = jnp.full(labels.shape[:1] + (cfg.vision_prefix_len,), -1,
+                       labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    b, s, d = hidden.shape
+    n_chunks = cfg.loss_chunks if s % cfg.loss_chunks == 0 else 1
+    hs = hidden.reshape(b, n_chunks, s // n_chunks, d).swapaxes(0, 1)
+    ls = labels.reshape(b, n_chunks, s // n_chunks).swapaxes(0, 1)
+
+    def chunk_loss(args):
+        h, l = args
+        logits = logits_for(params, cfg, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None],
+                                   axis=-1)[..., 0]
+        mask = (l >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    losses, counts = jax.lax.map(chunk_loss, (hs, ls))
+    return jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               enc_len: int = 0):
+    """Cache pytree (+ logical specs) for decode.  Attention layers get
+    (B, S, KV, hd) K/V buffers (ring-buffered to `window` for local
+    layers); recurrent kinds get their O(1) states."""
+    kinds = cfg.layer_kinds()
+    npat = len(cfg.pattern)
+    n_groups, rem = cfg.n_layers // npat, cfg.n_layers % npat
+    kv_dt = jnp.int8 if cfg.kv_quant else cfg.compute_dtype
+
+    def layer_cache(kind):
+        if kind in ("global", "local"):
+            s = min(cfg.window, max_len) if kind == "local" else max_len
+            c = {"k": jnp.zeros((batch_size, s, cfg.n_kv_heads, cfg.head_dim),
+                                kv_dt),
+                 "v": jnp.zeros((batch_size, s, cfg.n_kv_heads, cfg.head_dim),
+                                kv_dt)}
+            sp = {"k": ("batch", "kv_seq", "tp?", "kv_hd"),
+                  "v": ("batch", "kv_seq", "tp?", "kv_hd")}
+            if cfg.kv_quant:
+                c["k_s"] = jnp.zeros((batch_size, s, cfg.n_kv_heads),
+                                     jnp.float32)
+                c["v_s"] = jnp.zeros((batch_size, s, cfg.n_kv_heads),
+                                     jnp.float32)
+                sp["k_s"] = ("batch", "kv_seq", "tp?")
+                sp["v_s"] = ("batch", "kv_seq", "tp?")
+            if cfg.encoder_decoder:
+                c["xk"] = jnp.zeros((batch_size, enc_len, cfg.n_kv_heads,
+                                     cfg.head_dim), cfg.compute_dtype)
+                c["xv"] = jnp.zeros_like(c["xk"])
+                sp["xk"] = ("batch", None, "tp?", None)
+                sp["xv"] = ("batch", None, "tp?", None)
+            return c, sp
+        if kind == "recurrent":
+            kw = 4  # conv width
+            c = {"h": jnp.zeros((batch_size, cfg.lru_width), jnp.float32),
+                 "conv": jnp.zeros((batch_size, kw - 1, cfg.lru_width),
+                                   jnp.float32)}
+            sp = {"h": ("batch", "tp"), "conv": ("batch", None, "tp")}
+            return c, sp
+        if kind == "mlstm":
+            d_inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+            hd = d_inner // cfg.n_heads
+            c = {"C": jnp.zeros((batch_size, cfg.n_heads, hd, hd), jnp.float32),
+                 "n": jnp.zeros((batch_size, cfg.n_heads, hd), jnp.float32),
+                 "m": jnp.full((batch_size, cfg.n_heads), -30.0, jnp.float32)}
+            sp = {"C": ("batch", "tp?", None, None),
+                  "n": ("batch", "tp?", None), "m": ("batch", "tp?")}
+            return c, sp
+        if kind == "slstm":
+            z = jnp.zeros((batch_size, cfg.d_model), jnp.float32)
+            c = {"h": z, "c": z, "n": z, "m": z - 30.0}
+            sp = {k: ("batch", None) for k in "hcnm"}
+            return c, sp
+        raise ValueError(kind)
+
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    cspec: Params = {"pos": ()}
+    if n_groups:
+        gc, gs = {}, {}
+        for j in range(npat):
+            c, sp = layer_cache(cfg.pattern[j])
+            gc[f"b{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(), c)
+            gs[f"b{j}"] = jax.tree.map(
+                lambda t: (None,) + tuple(t), sp,
+                is_leaf=lambda t: isinstance(t, tuple))
+        cache["scan"], cspec["scan"] = gc, gs
+    for r in range(rem):
+        c, sp = layer_cache(cfg.pattern[r % npat])
+        cache[f"rest{r}"], cspec[f"rest{r}"] = c, sp
+    return cache, cspec
+
+
+def _kv_write(cache_layer, kind, k_new, v_new, pos, cfg, window):
+    """Write K/V at `pos` (ring-buffered for local).
+
+    kv_onehot_write (single-token writes only): express the update as a
+    one-hot masked blend instead of dynamic-update-slice.  On a cache
+    whose sequence dim is sharded, DUS at a traced index forces GSPMD to
+    all-gather the cache every step; the blend stays shard-local at the
+    cost of re-writing the cache (decode is cache-bandwidth-bound anyway
+    — §Perf iteration 1)."""
+    s_buf = cache_layer["k"].shape[1]
+    idx = pos % s_buf
+    if cfg.kv_onehot_write and k_new.shape[1] == 1:
+        oh = (jnp.arange(s_buf) == idx)[None, :, None, None]
+
+        def blend(buf, val):
+            val = val.astype(jnp.float32) if buf.dtype == jnp.int8 else val
+            out = jnp.where(oh, val.astype(jnp.float32),
+                            buf.astype(jnp.float32))
+            return out.astype(buf.dtype)
+
+        cache_layer = dict(cache_layer)
+        if cfg.kv_quant:
+            def q8(x):
+                sc = jnp.max(jnp.abs(x), axis=-1) / 127.0 + 1e-9
+                qv = jnp.clip(jnp.round(x / sc[..., None]), -127, 127
+                              ).astype(jnp.int8)
+                return qv, sc
+            kq, ks = q8(k_new.astype(jnp.float32))
+            vq, vs = q8(v_new.astype(jnp.float32))
+            oh3 = oh[..., 0]
+            cache_layer["k"] = jnp.where(oh, kq, cache_layer["k"])
+            cache_layer["v"] = jnp.where(oh, vq, cache_layer["v"])
+            cache_layer["k_s"] = jnp.where(oh3, ks, cache_layer["k_s"])
+            cache_layer["v_s"] = jnp.where(oh3, vs, cache_layer["v_s"])
+            return cache_layer
+        cache_layer["k"] = blend(cache_layer["k"], k_new)
+        cache_layer["v"] = blend(cache_layer["v"], v_new)
+        return cache_layer
+    if cfg.kv_quant:
+        def q8(x):
+            s = jnp.max(jnp.abs(x), axis=-1) / 127.0 + 1e-9   # (B,1,KV)
+            q = jnp.clip(jnp.round(x / s[..., None]), -127, 127
+                         ).astype(jnp.int8)
+            return q, s
+        kq, ks = q8(k_new.astype(jnp.float32))
+        vq, vs = q8(v_new.astype(jnp.float32))
+        cache_layer = dict(cache_layer)
+        cache_layer["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["k"], kq, idx, axis=1)
+        cache_layer["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["v"], vq, idx, axis=1)
+        cache_layer["k_s"] = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["k_s"], ks, idx, axis=1)
+        cache_layer["v_s"] = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["v_s"], vs, idx, axis=1)
+        return cache_layer
+    cache_layer = dict(cache_layer)
+    cache_layer["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache_layer["k"], k_new.astype(cache_layer["k"].dtype), idx, axis=1)
+    cache_layer["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache_layer["v"], v_new.astype(cache_layer["v"].dtype), idx, axis=1)
+    return cache_layer
+
+
+def _kv_read(cache_layer, cfg):
+    if cfg.kv_quant:
+        k = (cache_layer["k"].astype(jnp.float32)
+             * cache_layer["k_s"][..., None]).astype(cfg.compute_dtype)
+        v = (cache_layer["v"].astype(jnp.float32)
+             * cache_layer["v_s"][..., None]).astype(cfg.compute_dtype)
+        return k, v
+    return cache_layer["k"], cache_layer["v"]
+
+
+def _decode_block(p, kind, x_t, cl, cfg, pos, *, approx_cfg=0):
+    """One layer, one token. x_t: (B,1,d). Returns (x_t, new_cache_layer)."""
+    from .layers import apply_rope
+    if kind in ("global", "local"):
+        res = x_t
+        h = _apply_norm(p["norm1"], x_t, cfg)
+        q = _proj(h, p["attn"]["wq"], approx_cfg, p["attn"].get("bq"))
+        k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"))
+        v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"))
+        if cfg.norm == "rms":
+            posv = pos[None, None] if pos.ndim == 0 else pos[:, None]
+            q = apply_rope(q, posv, cfg.rope_theta)
+            k = apply_rope(k, posv, cfg.rope_theta)
+        window = cfg.window if kind == "local" else 0
+        if cfg.kv_onehot_write:
+            # seq-sharded cache mode: replicate q over the model axis so
+            # the score einsum's only sharded free dim is the cache seq —
+            # otherwise GSPMD all-gathers the (GB-scale) cache instead of
+            # the (KB-scale) query (§Perf iteration 1, second attempt).
+            from repro.dist.sharding import lsc
+            q = lsc(q, "batch", None, None, None)
+        cl = _kv_write(cl, kind, k, v, pos, cfg, window)
+        kc, vc = _kv_read(cl, cfg)
+        s_buf = kc.shape[1]
+        cache_len = jnp.minimum(pos + 1, s_buf)
+        attn = decode_attention(q, kc, vc, cache_len,
+                                window=0 if kind == "local" else 0,
+                                logit_cap=cfg.attn_softcap,
+                                scale=cfg.query_scale)
+        if cfg.kv_onehot_write:
+            # block backward propagation of wo's head-sharding into the
+            # score tensors (it would re-gather the seq-sharded cache)
+            from repro.dist.sharding import lsc
+            attn = lsc(attn, "batch", None, None, None)
+        y = _attn_out(attn, p["attn"]["wo"], approx_cfg)
+        if cfg.post_norm:
+            y = _apply_norm(p["post1"], y, cfg)
+        x_t = res + y
+        if cfg.encoder_decoder and "xattn" in p:
+            res = x_t
+            h = _apply_norm(p["norm_x"], x_t, cfg)
+            q = _proj(h, p["xattn"]["wq"], approx_cfg)
+            attn = decode_attention(q, cl["xk"], cl["xv"],
+                                    cl["xk"].shape[1])
+            x_t = res + _attn_out(attn, p["xattn"]["wo"], approx_cfg)
+        res = x_t
+        h = _apply_norm(p["norm2"], x_t, cfg)
+        y = _mlp_apply(p["mlp"], h, cfg, approx_cfg)
+        if cfg.post_norm:
+            y = _apply_norm(p["post2"], y, cfg)
+        return res + y, cl
+    if kind == "recurrent":
+        res = x_t
+        h = _apply_norm(p["norm1"], x_t, cfg)
+        y, new_state = recurrent_block(p["rec"], h, approx_cfg=approx_cfg,
+                                       state=cl, decode=True)
+        x_t = res + y
+        res = x_t
+        h = _apply_norm(p["norm2"], x_t, cfg)
+        return res + _mlp_apply(p["mlp"], h, cfg, approx_cfg), new_state
+    if kind == "mlstm":
+        res = x_t
+        h = _apply_norm(p["norm1"], x_t, cfg)
+        y, new_state = mlstm_step(p["cell"], h, cl, cfg.n_heads,
+                                  approx_cfg=approx_cfg)
+        return res + y, new_state
+    if kind == "slstm":
+        res = x_t
+        h = _apply_norm(p["norm1"], x_t, cfg)
+        y, new_state = slstm_step(p["cell"], h, cl, cfg.n_heads,
+                                  approx_cfg=approx_cfg)
+        return res + y, new_state
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, *,
+                approx_cfg: int = 0):
+    """token: (B, 1) int32 -> (logits (B, V), new_cache)."""
+    from repro.dist.sharding import lsc
+    token = lsc(token, "batch", None)
+    x = embed_tokens(params, cfg, token)
+    x = lsc(x, "batch", None, None)
+    if cfg.norm == "ln":
+        x = x + params["dec_pos"][cache["pos"]][None, None].astype(x.dtype)
+    pos = cache["pos"]
+    new_cache: Params = {"pos": pos + 1}
+
+    if "scan" in params["blocks"]:
+        def scan_fn(x, gp_cl):
+            gp, cl = gp_cl
+            ncl = {}
+            for j, kind in enumerate(cfg.pattern):
+                x = lsc(x, "batch", None, None)
+                x, c = _decode_block(gp[f"b{j}"], kind, x, cl[f"b{j}"],
+                                     cfg, pos, approx_cfg=approx_cfg)
+                ncl[f"b{j}"] = c
+            return x, ncl
+        if cfg.scan_layers:
+            x, new_scan = jax.lax.scan(scan_fn, x, (params["blocks"]["scan"],
+                                                    cache["scan"]))
+        else:
+            n_groups = jax.tree.leaves(params["blocks"]["scan"])[0].shape[0]
+            outs = []
+            for g in range(n_groups):
+                gp_cl = jax.tree.map(lambda a: a[g],
+                                     (params["blocks"]["scan"],
+                                      cache["scan"]))
+                x, ncl = scan_fn(x, gp_cl)
+                outs.append(ncl)
+            new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache["scan"] = new_scan
+    r = 0
+    while f"rest{r}" in params["blocks"]:
+        kind = cfg.pattern[r % len(cfg.pattern)]
+        x, c = _decode_block(params["blocks"][f"rest{r}"], kind, x,
+                             cache[f"rest{r}"], cfg, pos,
+                             approx_cfg=approx_cfg)
+        new_cache[f"rest{r}"] = c
+        r += 1
+    x = _apply_norm(params["final_norm"], x, cfg)
+    logits = logits_for(params, cfg, x[:, 0])
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
+            enc_embeds=None, max_len: int | None = None,
+            approx_cfg: int = 0):
+    """Sequence prefill: returns (last-token logits, populated cache).
+
+    Implementation: full forward for activations; K/V recomputed per
+    layer into the cache via a per-layer pass (keeps code simple and
+    XLA CSEs the shared projections)."""
+    b, s = tokens.shape[0], tokens.shape[1]
+    if cfg.vision_prefix_len and vision_embeds is not None:
+        s = s + cfg.vision_prefix_len
+    max_len = max_len or s
+    enc_len = enc_embeds.shape[1] if enc_embeds is not None else 0
+    cache, cache_spec = init_cache(cfg, b, max_len, enc_len)
+    from repro.dist.sharding import lsc, lsc_tree
+    cache = lsc_tree(cache, cache_spec)
+    tokens = lsc(tokens, "batch", None)
+    x = embed_tokens(params, cfg, tokens)
+    x = lsc(x, "batch", None, None)
+    if cfg.vision_prefix_len and vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+    if cfg.norm == "ln":
+        x = x + params["dec_pos"][:x.shape[1]][None].astype(x.dtype)
+    enc_out = None
+    if cfg.encoder_decoder and enc_embeds is not None:
+        enc_out = encode(params, cfg, enc_embeds)
+    positions = jnp.arange(x.shape[1])[None]
+
+    def fill_block(p, kind, x, cl):
+        from .layers import apply_rope
+        x = lsc(x, "batch", None, None)
+        if kind in ("global", "local"):
+            h = _apply_norm(p["norm1"], x, cfg)
+            k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"))
+            v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"))
+            if cfg.norm == "rms":
+                k = apply_rope(k, positions, cfg.rope_theta)
+            s_buf = cl["k"].shape[1]
+            k_w = k[:, -s_buf:]
+            v_w = v[:, -s_buf:]
+            cl = _kv_write(cl, kind, k_w, v_w, jnp.zeros((), jnp.int32), cfg,
+                           cfg.window)
+            if kind == "local" and x.shape[1] > s_buf:
+                # ring-buffer invariant: position p lives at index p % s_buf.
+                # prefill wrote positions [S-s_buf, S) at [0, s_buf); roll so
+                # decode's pos % s_buf indexing lines up.
+                roll = (x.shape[1] - s_buf) % s_buf
+                cl = {kk: (jnp.roll(vv, roll, axis=1)
+                           if kk in ("k", "v", "k_s", "v_s") else vv)
+                      for kk, vv in cl.items()}
+            if cfg.encoder_decoder and "xattn" in p:
+                cl = dict(cl)
+                cl["xk"] = _proj(enc_out, p["xattn"]["wk"], approx_cfg
+                                 ).astype(cl["xk"].dtype)
+                cl["xv"] = _proj(enc_out, p["xattn"]["wv"], approx_cfg
+                                 ).astype(cl["xv"].dtype)
+            x = _apply_block(p, kind, x, cfg, positions=positions,
+                             approx_cfg=approx_cfg, causal=True,
+                             enc_out=enc_out)
+            return x, cl
+        # recurrent kinds: run the parallel path, capture final state
+        if kind == "recurrent":
+            res = x
+            h = _apply_norm(p["norm1"], x, cfg)
+            y, state = recurrent_block(p["rec"], h, approx_cfg=approx_cfg)
+            x = res + y
+            res = x
+            h = _apply_norm(p["norm2"], x, cfg)
+            return res + _mlp_apply(p["mlp"], h, cfg, approx_cfg), state
+        if kind == "mlstm":
+            from .recurrent import mlstm_final_state
+            res = x
+            h = _apply_norm(p["norm1"], x, cfg)
+            y = mlstm_parallel(p["cell"], h, cfg.n_heads,
+                               approx_cfg=approx_cfg, q_chunk=cfg.q_chunk,
+                               unroll=cfg.unroll_chunks)
+            state = mlstm_final_state(p["cell"], h, cfg.n_heads,
+                                      approx_cfg=approx_cfg)
+            return res + y, state
+        if kind == "slstm":
+            res = x
+            h = _apply_norm(p["norm1"], x, cfg)
+            y, state = slstm_scan(p["cell"], h, cfg.n_heads,
+                                  approx_cfg=approx_cfg)
+            return res + y, state
+        raise ValueError(kind)
+
+    new_cache: Params = {"pos": jnp.asarray(s, jnp.int32)}
+    if "scan" in params["blocks"]:
+        def scan_fn(x, gp_cl):
+            gp, cl = gp_cl
+            ncl = {}
+            for j, kind in enumerate(cfg.pattern):
+                x, c = fill_block(gp[f"b{j}"], kind, x, cl[f"b{j}"])
+                ncl[f"b{j}"] = c
+            return x, ncl
+        if cfg.scan_layers:
+            x, new_scan = jax.lax.scan(scan_fn, x, (params["blocks"]["scan"],
+                                                    cache["scan"]))
+        else:
+            n_groups = jax.tree.leaves(params["blocks"]["scan"])[0].shape[0]
+            outs = []
+            for g in range(n_groups):
+                gp_cl = jax.tree.map(lambda a: a[g],
+                                     (params["blocks"]["scan"],
+                                      cache["scan"]))
+                x, ncl = scan_fn(x, gp_cl)
+                outs.append(ncl)
+            new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache["scan"] = new_scan
+    r = 0
+    while f"rest{r}" in params["blocks"]:
+        kind = cfg.pattern[r % len(cfg.pattern)]
+        x, c = fill_block(params["blocks"][f"rest{r}"], kind, x,
+                          cache[f"rest{r}"])
+        new_cache[f"rest{r}"] = c
+        r += 1
+    x = _apply_norm(params["final_norm"], x, cfg)
+    logits = logits_for(params, cfg, x[:, -1])
+    return logits, new_cache

@@ -1,0 +1,131 @@
+"""Optimizers implemented from scratch in JAX (no optax dependency).
+
+Functional API mirroring the (init, update) convention:
+
+    opt = adamw(lr=3e-4, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All optimizer states are pytrees with the same tree structure as the
+params, so they shard identically under pjit (rule: optimizer state
+inherits the param's PartitionSpec).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+@dataclass
+class AdamWState:
+    step: Any
+    mu: Any
+    nu: Any
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node_class(AdamWState)
+
+
+def adamw(lr: float | Callable[[jax.Array], jax.Array] = 1e-3,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          grad_clip_norm: float | None = None) -> Optimizer:
+    """AdamW with optional global-norm clipping and schedule-as-callable lr.
+
+    Moments are kept in f32 regardless of param dtype (mixed-precision
+    safe); decay is decoupled (Loshchilov-Hutter).
+    """
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(grads, state: AdamWState, params):
+        if grad_clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip_norm)
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m, v
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.9,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "vel": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                    params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+
+        def upd(g, v):
+            g = g.astype(jnp.float32)
+            v = momentum * v + g
+            d = g + momentum * v if nesterov else v
+            return -lr_t * d, v
+
+        out = jax.tree.map(upd, grads, state["vel"])
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        vel = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"step": step, "vel": vel}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,74 @@
+"""Train-step builder: loss + grad (with microbatch accumulation) +
+optimizer update, as a single jit-able function over a TrainState pytree.
+
+Microbatching (gradient accumulation via lax.scan) bounds activation
+memory: each microbatch's remat'ed backward runs before the next starts,
+so boundary activations scale with B/num_microbatches (DESIGN.md §5).
+Gradients accumulate in f32 with the same sharding as the params (FSDP).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.transformer import ModelConfig, lm_loss
+from .optimizer import Optimizer, apply_updates, global_norm
+
+
+def init_state(params, opt: Optimizer):
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def build_train_step(cfg: ModelConfig, opt: Optimizer,
+                     num_microbatches: int = 1,
+                     loss_fn: Callable | None = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = loss_fn or (lambda p, mb: lm_loss(p, cfg, mb))
+
+    def split_mb(batch):
+        def r(x):
+            b = x.shape[0]
+            assert b % num_microbatches == 0, (b, num_microbatches)
+            return x.reshape((num_microbatches, b // num_microbatches)
+                             + x.shape[1:])
+        return jax.tree.map(r, batch)
+
+    def train_step(state, batch):
+        from repro.dist.sharding import lsc
+        params = state["params"]
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mbs = split_mb(batch)
+            mbs = jax.tree.map(
+                lambda x: lsc(x, None, "batch", *([None] * (x.ndim - 2))),
+                mbs)
+
+            def mb_body(acc, mb):
+                mb = jax.tree.map(
+                    lambda x: lsc(x, "batch", *([None] * (x.ndim - 1))), mb)
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                mb_body, (zero_g, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+        updates, new_opt = opt.update(grads, state["opt"], params)
+        new_params = apply_updates(params, updates)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "grad_norm": global_norm(grads),
+                   "step": state["step"] + 1}
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step

@@ -1,0 +1,9 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — unit tests must see
+the real single-CPU device; multi-device tests spawn subprocesses."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

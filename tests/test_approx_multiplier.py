@@ -1,0 +1,111 @@
+"""Unit + property tests for the error-configurable multiplier model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.approx_multiplier import (CONFIG_TABLE, EXACT_TABLE, N_CONFIGS,
+                                          approx_multiply_magnitude,
+                                          approx_multiply_signed,
+                                          config_params, exhaustive_products)
+from repro.core.error_metrics import (PAPER_TABLE_I, multiplier_error_stats,
+                                      summary_table)
+
+mags = st.integers(min_value=0, max_value=127)
+signed = st.integers(min_value=-127, max_value=127)
+configs = st.integers(min_value=0, max_value=31)
+
+
+def test_config_zero_is_exact():
+    assert np.array_equal(exhaustive_products(0), EXACT_TABLE)
+
+
+def test_config_table_has_31_distinct_entries():
+    assert len(CONFIG_TABLE) == N_CONFIGS - 1 == 31
+    assert len(set(CONFIG_TABLE)) == 31
+
+
+def test_no_approx_config_is_exact():
+    for c in range(1, 32):
+        assert (exhaustive_products(c) != EXACT_TABLE).any(), c
+
+
+@given(a=mags, b=mags, c=configs)
+@settings(max_examples=300, deadline=None)
+def test_commutativity(a, b, c):
+    pa = approx_multiply_magnitude(np.array(a), np.array(b), c)
+    pb = approx_multiply_magnitude(np.array(b), np.array(a), c)
+    assert int(pa) == int(pb)
+
+
+@given(a=mags, b=mags, c=configs)
+@settings(max_examples=300, deadline=None)
+def test_error_bounded_by_truncation_depth(a, b, c):
+    """|approx - exact| < 2^t + compensation bound."""
+    approx = int(approx_multiply_magnitude(np.array(a), np.array(b), c))
+    exact = a * b
+    if c == 0:
+        assert approx == exact
+    else:
+        _, t, _ = config_params(c)
+        assert abs(approx - exact) <= (1 << t)
+
+
+@given(a=mags, b=mags, c=st.integers(min_value=1, max_value=31))
+@settings(max_examples=300, deadline=None)
+def test_gating_small_operands_exact(a, b, c):
+    """Below the operand gate, the multiplier is exact."""
+    _, _, gate = config_params(c)
+    if gate > 0 and (a < gate or b < gate):
+        approx = int(approx_multiply_magnitude(np.array(a), np.array(b), c))
+        assert approx == a * b
+
+
+@given(a=signed, b=signed, c=configs)
+@settings(max_examples=300, deadline=None)
+def test_sign_handling_is_xor(a, b, c):
+    """Sign is exact (XOR of operand signs); magnitude is the unsigned
+    approximate product — the paper's MAC datapath invariant."""
+    p = int(approx_multiply_signed(np.array(a), np.array(b), c))
+    mag = int(approx_multiply_magnitude(np.array(abs(a)), np.array(abs(b)), c))
+    assert p == np.sign(a) * np.sign(b) * mag
+
+
+def test_zero_operand_gives_zero():
+    for c in range(32):
+        assert int(approx_multiply_magnitude(np.array(0), np.array(77), c)) == 0
+        assert int(approx_multiply_magnitude(np.array(77), np.array(0), c)) == 0
+
+
+def test_jax_numpy_paths_agree():
+    import jax.numpy as jnp
+    a = np.arange(128, dtype=np.int32)
+    b = np.arange(127, -1, -1, dtype=np.int32)
+    for c in (0, 5, 17, 31):
+        np_out = approx_multiply_magnitude(a, b, c)
+        jx_out = np.asarray(approx_multiply_magnitude(jnp.asarray(a),
+                                                      jnp.asarray(b), c))
+        assert np.array_equal(np_out, jx_out), c
+
+
+# --- Table I envelope (paper validation) -----------------------------------
+
+def test_er_envelope_matches_paper():
+    s = summary_table()
+    # our ER envelope brackets the paper's within 1.5 percentage points
+    assert abs(s["er_min"] - PAPER_TABLE_I["er_min"]) < 0.015
+    assert abs(s["er_max"] - PAPER_TABLE_I["er_max"]) < 0.015
+    assert abs(s["er_avg"] - PAPER_TABLE_I["er_avg"]) < 0.05
+
+
+def test_mred_envelope_reasonable():
+    s = summary_table()
+    assert s["mred_max"] <= PAPER_TABLE_I["mred_max"] * 1.05
+    assert s["mred_min"] <= PAPER_TABLE_I["mred_min"]
+    # average within the paper's order of magnitude
+    assert 0.25 * PAPER_TABLE_I["mred_avg"] <= s["mred_avg"] \
+        <= 1.5 * PAPER_TABLE_I["mred_avg"]
+
+
+def test_stats_exact_config():
+    s = multiplier_error_stats(0)
+    assert s.er == 0.0 and s.mred == 0.0 and s.nmed == 0.0

@@ -1,0 +1,107 @@
+"""chunked_attention / decode_attention vs the reference oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.attention import (chunked_attention, decode_attention,
+                                ref_attention)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def qkv(b, sq, skv, h, kv, hd, dtype=jnp.float32, case=0):
+    ks = jax.random.split(jax.random.fold_in(KEY, case), 3)
+    return (jax.random.normal(ks[0], (b, sq, h, hd), dtype),
+            jax.random.normal(ks[1], (b, skv, kv, hd), dtype),
+            jax.random.normal(ks[2], (b, skv, kv, hd), dtype))
+
+
+@pytest.mark.parametrize("case,b,s,h,kv,hd,causal,window,cap,qc", [
+    (1, 2, 64, 4, 4, 32, True, 0, 0.0, 16),
+    (2, 2, 64, 4, 2, 32, True, 0, 0.0, 16),      # GQA
+    (3, 1, 128, 4, 1, 32, True, 32, 0.0, 32),    # MQA + window
+    (4, 2, 64, 2, 2, 32, True, 0, 50.0, 16),     # softcap
+    (5, 2, 60, 2, 2, 32, True, 0, 0.0, 16),      # non-divisible S (padding)
+    (6, 1, 64, 2, 2, 32, False, 0, 0.0, 64),     # non-causal single chunk
+    (7, 1, 96, 2, 2, 32, True, 16, 30.0, 32),    # window + cap
+])
+def test_chunked_matches_ref(case, b, s, h, kv, hd, causal, window, cap, qc):
+    q, k, v = qkv(b, s, s, h, kv, hd, case=case)
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            logit_cap=cap, q_chunk=qc)
+    ref = ref_attention(q, k, v, causal=causal, window=window, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_unroll_matches_map():
+    q, k, v = qkv(2, 64, 64, 4, 4, 32, case=10)
+    a = chunked_attention(q, k, v, q_chunk=16, unroll=False)
+    b = chunked_attention(q, k, v, q_chunk=16, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_cross_attention_kv_longer():
+    q, k, v = qkv(2, 16, 48, 4, 4, 32, case=11)
+    out = chunked_attention(q, k, v, causal=False, q_chunk=8)
+    ref = ref_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_ref_last_position():
+    """decode at position P == full attention's row P."""
+    b, s, h, kv, hd = 2, 32, 4, 2, 16
+    q, k, v = qkv(b, s, s, h, kv, hd, case=12)
+    full = ref_attention(q, k, v, causal=True)
+    s_max = 48
+    k_cache = jnp.zeros((b, s_max, kv, hd)).at[:, :s].set(k)
+    v_cache = jnp.zeros((b, s_max, kv, hd)).at[:, :s].set(v)
+    out = decode_attention(q[:, -1:], k_cache, v_cache, cache_len=s)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_window_semantics():
+    b, s, h, kv, hd, w = 1, 32, 2, 2, 16, 8
+    q, k, v = qkv(b, s, s, h, kv, hd, case=13)
+    full = ref_attention(q, k, v, causal=True, window=w)
+    out = decode_attention(q[:, -1:], k, v, cache_len=s, window=w)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mlstm_decay_matches_naive_recurrence():
+    """Parallel decay-attention form == sequential mLSTM recurrence."""
+    b, s, h, hd = 1, 24, 2, 8
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    log_i = jax.random.normal(ks[3], (b, s, h)) * 0.5
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)) + 2.0)
+    log_fcum = jnp.cumsum(log_f, axis=1)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=8,
+                            decay={"log_fcum": log_fcum, "log_i": log_i})
+    # naive sequential recurrence (xLSTM eq. 19-27)
+    ref = np.zeros((b, s, h, hd), np.float32)
+    for bi in range(b):
+        for hi in range(h):
+            C = np.zeros((hd, hd))
+            n = np.zeros(hd)
+            m = -np.inf
+            for t in range(s):
+                lf = float(log_f[bi, t, hi])
+                li = float(log_i[bi, t, hi])
+                m_new = max(lf + m, li)
+                fs, is_ = np.exp(lf + m - m_new), np.exp(li - m_new)
+                kt = np.asarray(k[bi, t, hi], np.float64)
+                vt = np.asarray(v[bi, t, hi], np.float64)
+                qt = np.asarray(q[bi, t, hi], np.float64) / np.sqrt(hd)
+                C = fs * C + is_ * np.outer(kt, vt)
+                n = fs * n + is_ * kt
+                m = m_new
+                den = max(abs(float(n @ qt)), np.exp(-m))
+                ref[bi, t, hi] = (C.T @ qt) / den
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,101 @@
+"""Pallas kernels vs ref.py oracles (interpret=True on CPU): shape/dtype
+sweeps per the assignment spec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.approx_mac.ops import approx_mac
+from repro.kernels.approx_mac.ref import approx_mac_matmul_ref
+from repro.kernels.flash_attention.ops import flash_attn
+from repro.nn.attention import ref_attention
+
+RNG = np.random.default_rng(42)
+
+
+# --- approx_mac -------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 256, 128), (64, 128, 64), (100, 200, 60), (256, 512, 384),
+    (1, 256, 128), (130, 260, 129),
+])
+@pytest.mark.parametrize("cfg", [0, 1, 8, 16, 24, 31])
+def test_approx_mac_bit_exact(m, k, n, cfg):
+    a = jnp.asarray(RNG.integers(-127, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-127, 128, (k, n)), jnp.int8)
+    out = approx_mac(a, b, cfg, interpret=True)
+    ref = approx_mac_matmul_ref(a, b, cfg)
+    assert out.dtype == jnp.int32
+    assert jnp.array_equal(out, ref), (m, k, n, cfg)
+
+
+def test_approx_mac_batched():
+    a = jnp.asarray(RNG.integers(-127, 128, (2, 3, 64, 128)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-127, 128, (128, 64)), jnp.int8)
+    out = approx_mac(a, b, 8, interpret=True)
+    ref = approx_mac_matmul_ref(a.reshape(-1, 128), b, 8).reshape(2, 3, 64, 64)
+    assert jnp.array_equal(out, ref)
+
+
+@given(bm=st.sampled_from([64, 128]), bk=st.sampled_from([128, 256]),
+       cfg=st.integers(0, 31))
+@settings(max_examples=12, deadline=None)
+def test_approx_mac_block_shape_invariance(bm, bk, cfg):
+    """Result is independent of the BlockSpec tiling."""
+    a = jnp.asarray(RNG.integers(-127, 128, (64, 128)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-127, 128, (128, 64)), jnp.int8)
+    out = approx_mac(a, b, cfg, bm=bm, bn=64, bk=bk, interpret=True)
+    ref = approx_mac_matmul_ref(a, b, cfg)
+    assert jnp.array_equal(out, ref)
+
+
+# --- flash attention ---------------------------------------------------------
+
+@pytest.mark.parametrize("b,sq,skv,h,kv,hd,causal,window,cap", [
+    (2, 128, 128, 4, 4, 128, True, 0, 0.0),
+    (2, 128, 128, 4, 2, 128, True, 0, 0.0),     # GQA
+    (1, 256, 256, 4, 1, 128, True, 64, 0.0),    # MQA + window
+    (1, 128, 128, 2, 2, 128, True, 0, 50.0),    # gemma2 softcap
+    (2, 100, 100, 4, 4, 120, True, 0, 0.0),     # danube hd=120 (pad)
+    (1, 64, 192, 2, 2, 128, False, 0, 0.0),     # cross attention
+    (1, 96, 96, 2, 2, 128, True, 32, 30.0),     # window + softcap
+])
+def test_flash_attention_matches_ref(b, sq, skv, h, kv, hd, causal, window,
+                                     cap):
+    ks = jax.random.split(jax.random.PRNGKey(b * sq + skv + h), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd))
+    k = jax.random.normal(ks[1], (b, skv, kv, hd))
+    v = jax.random.normal(ks[2], (b, skv, kv, hd))
+    out = flash_attn(q, k, v, causal=causal, window=window, logit_cap=cap,
+                     bq=64, bk=64, interpret=True)
+    ref = ref_attention(q, k, v, causal=causal, window=window, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 128), dtype)
+    k = jax.random.normal(ks[1], (2, 128, 4, 128), dtype)
+    v = jax.random.normal(ks[2], (2, 128, 4, 128), dtype)
+    out = flash_attn(q, k, v, bq=64, bk=64, interpret=True)
+    ref = ref_attention(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 128))
+    k = jax.random.normal(ks[1], (1, 128, 2, 128))
+    v = jax.random.normal(ks[2], (1, 128, 2, 128))
+    outs = [flash_attn(q, k, v, bq=bq, bk=bk, interpret=True)
+            for bq, bk in [(32, 32), (64, 128), (128, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)

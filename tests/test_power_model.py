@@ -1,0 +1,48 @@
+"""Power-model calibration against the paper's published endpoints."""
+import numpy as np
+import pytest
+
+from repro.core import power_model as pm
+
+
+def test_exact_network_power():
+    assert pm.network_power_mw(0) == pytest.approx(5.55, abs=1e-6)
+
+
+def test_min_accuracy_network_power():
+    assert pm.network_power_mw(31) == pytest.approx(4.81, abs=0.005)
+
+
+def test_max_network_improvement():
+    assert pm.network_improvement_pct(31) == pytest.approx(13.33, abs=0.05)
+
+
+def test_max_mac_saving():
+    assert pm.mac_saving(31) == pytest.approx(0.4436, abs=1e-4)
+
+
+def test_max_neuron_saving():
+    neuron_saving = 1 - pm.neuron_power_mw(31) / pm.neuron_power_mw(0)
+    assert neuron_saving == pytest.approx(0.2478, abs=1e-3)
+
+
+def test_saving_monotone_in_config_index():
+    s = pm.MAC_SAVING_FRAC
+    assert s[0] == 0.0
+    assert np.all(np.diff(s[1:]) >= -1e-12)
+
+
+def test_power_bounds():
+    for c in range(32):
+        assert pm.NETWORK_POWER_MIN_MW - 1e-6 <= pm.network_power_mw(c) \
+            <= pm.NETWORK_POWER_EXACT_MW + 1e-6
+
+
+def test_mac_energy_consistent_with_power():
+    # E = P/f at the paper's 100 MHz, 1 MAC/cycle
+    e = pm.MAC_POWER_EXACT_MW * 1e-3 / pm.PAPER_CLOCK_HZ * 1e12
+    assert pm.MAC_ENERGY_EXACT_PJ == pytest.approx(e)
+
+
+def test_model_energy_scaling():
+    assert pm.model_energy_mj(1e9, 0) > pm.model_energy_mj(1e9, 31)

@@ -1,0 +1,72 @@
+"""Quantizer + operand-truncation properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (QMAX, QTensor, fake_quant, quantize,
+                                     quantize_np, truncate_operand_lsb)
+
+
+def test_roundtrip_error_bound(rng):
+    x = rng.normal(size=(64, 32)).astype(np.float32)
+    qt = quantize(jnp.asarray(x))
+    err = np.abs(np.asarray(qt.dequantize()) - x)
+    assert err.max() <= float(qt.scale) * 0.5 + 1e-7
+
+
+def test_per_channel_beats_per_tensor(rng):
+    x = rng.normal(size=(64, 8)).astype(np.float32)
+    x[:, 3] *= 100.0    # one hot channel
+    per_t = np.abs(np.asarray(quantize(jnp.asarray(x)).dequantize()) - x)
+    per_c = np.abs(np.asarray(quantize(jnp.asarray(x), axis=1).dequantize()) - x)
+    assert per_c[:, :3].max() < per_t[:, :3].max()
+
+
+def test_numpy_jax_quantizers_agree(rng):
+    x = rng.normal(size=(16, 16)).astype(np.float32)
+    qn, sn = quantize_np(x)
+    qj = quantize(jnp.asarray(x))
+    assert np.array_equal(qn, np.asarray(qj.values))
+    assert sn == pytest.approx(float(qj.scale), rel=1e-6)
+
+
+def test_values_in_signed_magnitude_range(rng):
+    x = rng.normal(size=(100,)).astype(np.float32) * 1e3
+    q = np.asarray(quantize(jnp.asarray(x)).values)
+    assert q.min() >= -QMAX and q.max() <= QMAX   # -128 never produced
+
+
+def test_fake_quant_straight_through_grad():
+    x = jnp.linspace(-1, 1, 32)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v)))(x)
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+@given(depth=st.integers(0, 6), gate=st.sampled_from([0, 16, 32, 64]),
+       rtn=st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_truncation_properties(depth, gate, rtn):
+    v = jnp.arange(-127, 128, dtype=jnp.int8)
+    t = np.asarray(truncate_operand_lsb(v, depth, gate, rtn)).astype(np.int64)
+    orig = np.arange(-127, 128)
+    assert np.abs(t).max() <= 127                     # stays in int8 range
+    assert np.all(np.sign(t) * np.sign(orig) >= 0)    # sign never flips
+    assert np.abs(t - orig).max() <= (1 << depth) if depth else (t == orig).all()
+    if gate > 0:
+        small = np.abs(orig) < gate
+        assert np.array_equal(t[small], orig[small])  # gated values exact
+    if depth > 0:
+        big = np.abs(orig) >= max(gate, 1)
+        trunc_mags = np.abs(t[big])
+        in_range = trunc_mags < 127
+        assert np.all(trunc_mags[in_range] % (1 << depth) == 0)
+
+
+def test_qtensor_is_pytree():
+    qt = quantize(jnp.ones((4, 4)))
+    leaves = jax.tree.leaves(qt)
+    assert len(leaves) == 2
+    rebuilt = jax.tree.map(lambda x: x, qt)
+    assert isinstance(rebuilt, QTensor)

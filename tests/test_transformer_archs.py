@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests (reduced same-family configs) + the
+decode-vs-forward consistency contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, cells_for, get_config
+from repro.nn import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 24
+
+
+def make_batch(cfg, s=S):
+    ks = jax.random.split(KEY, 3)
+    tokens = jax.random.randint(ks[0], (B, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.vision_prefix_len:
+        batch["vision_embeds"] = jax.random.normal(
+            ks[1], (B, cfg.vision_prefix_len, cfg.d_model))
+    if cfg.encoder_decoder:
+        batch["enc_embeds"] = jax.random.normal(ks[2], (B, 16, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_loss_and_grads(arch):
+    cfg = get_config(arch).smoke()
+    params, specs = T.init_lm(KEY, cfg)
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(
+        lambda p: T.lm_loss(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    gnorm = np.sqrt(sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+                        for g in jax.tree.leaves(grads)))
+    assert np.isfinite(gnorm) and gnorm > 0
+    # spec tree mirrors the param tree
+    pt = jax.tree.structure(params)
+    st = jax.tree.structure(specs, is_leaf=lambda t: isinstance(t, tuple))
+    assert pt == st
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_dtype(arch):
+    cfg = get_config(arch).smoke()
+    params, _ = T.init_lm(KEY, cfg)
+    batch = make_batch(cfg)
+    hid = T.forward(params, cfg, batch["tokens"],
+                    vision_embeds=batch.get("vision_embeds"),
+                    enc_embeds=batch.get("enc_embeds"))
+    s_total = S + (cfg.vision_prefix_len or 0)
+    assert hid.shape == (B, s_total, cfg.d_model)
+    logits = T.logits_for(params, cfg, hid)
+    assert logits.shape == (B, s_total, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_matches_forward(arch):
+    cfg = get_config(arch).smoke()
+    params, _ = T.init_lm(KEY, cfg)
+    batch = make_batch(cfg)
+    logits_pf, cache = T.prefill(params, cfg, batch["tokens"],
+                                 vision_embeds=batch.get("vision_embeds"),
+                                 enc_embeds=batch.get("enc_embeds"),
+                                 max_len=S + (cfg.vision_prefix_len or 0) + 8)
+    hid = T.forward(params, cfg, batch["tokens"],
+                    vision_embeds=batch.get("vision_embeds"),
+                    enc_embeds=batch.get("enc_embeds"))
+    logits_fw = T.logits_for(params, cfg, hid[:, -1])
+    np.testing.assert_allclose(np.asarray(logits_pf), np.asarray(logits_fw),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_continuation_matches_forward(arch):
+    """prefill(s) + greedy decode of n tokens == teacher-forced forward
+    over the same extended sequence — the serving-correctness contract."""
+    # exact caches for the contract (int8 KV quantization is lossy by
+    # design and covered by test_kv_quant_cache_close_to_exact); MoE runs
+    # dropless so teacher-forced forward == decode exactly (the dropped-
+    # capacity training dispatch differs by design on dropped tokens,
+    # covered by test_moe.py::test_capacity_drops_reduce_output_norm)
+    cfg = get_config(arch).smoke(kv_quant=False, capacity_factor=99.0)
+    params, _ = T.init_lm(KEY, cfg)
+    batch = make_batch(cfg)
+    tokens = batch["tokens"]
+    n_extra = 4
+    logits, cache = T.prefill(params, cfg, tokens,
+                              vision_embeds=batch.get("vision_embeds"),
+                              enc_embeds=batch.get("enc_embeds"),
+                              max_len=S + (cfg.vision_prefix_len or 0)
+                              + n_extra + 1)
+    decoded = [int(jnp.argmax(logits[0]))]
+    seq = tokens
+    for i in range(n_extra):
+        nt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        seq = jnp.concatenate([seq, nt], axis=1)
+        logits, cache = T.decode_step(params, cfg, cache, nt)
+        decoded.append(int(jnp.argmax(logits[0])))
+    # teacher-forced reference over the extended sequence
+    hid = T.forward(params, cfg, seq,
+                    vision_embeds=batch.get("vision_embeds"),
+                    enc_embeds=batch.get("enc_embeds"))
+    ref = T.logits_for(params, cfg, hid[:, -1])
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-27b", "qwen2.5-3b", "olmoe-1b-7b"])
+def test_approx_cfg_degrades_gracefully(arch):
+    """The paper's knob: mild configs perturb logits slightly; output
+    stays finite at the most aggressive config."""
+    cfg = get_config(arch).smoke()
+    params, _ = T.init_lm(KEY, cfg)
+    batch = make_batch(cfg)
+    hid0 = T.forward(params, cfg, batch["tokens"])
+    hid1 = T.forward(params, cfg, batch["tokens"], approx_cfg=1)
+    hid31 = T.forward(params, cfg, batch["tokens"], approx_cfg=31)
+    rel1 = float(jnp.linalg.norm(hid1 - hid0) / (jnp.linalg.norm(hid0) + 1e-9))
+    assert rel1 < 0.35, rel1
+    assert np.isfinite(np.asarray(hid31, np.float32)).all()
+
+
+def test_scan_vs_unrolled_layers_identical():
+    cfg = get_config("qwen2.5-3b").smoke(n_layers=4)
+    import dataclasses
+    params, _ = T.init_lm(KEY, dataclasses.replace(cfg, scan_layers=True))
+    batch = make_batch(cfg)
+    h_scan = T.forward(params, dataclasses.replace(cfg, scan_layers=True),
+                       batch["tokens"])
+    h_unroll = T.forward(params, dataclasses.replace(cfg, scan_layers=False),
+                         batch["tokens"])
+    np.testing.assert_allclose(np.asarray(h_scan), np.asarray(h_unroll),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kv_quant_cache_close_to_exact():
+    import dataclasses
+    cfg = get_config("qwen2.5-3b").smoke()
+    params, _ = T.init_lm(KEY, cfg)
+    batch = make_batch(cfg)
+    lg, cache = T.prefill(params, cfg, batch["tokens"], max_len=S + 4)
+    cfg_q = dataclasses.replace(cfg, kv_quant=True)
+    lg_q, cache_q = T.prefill(params, cfg_q, batch["tokens"], max_len=S + 4)
+    nt = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    d0, _ = T.decode_step(params, cfg, cache, nt)
+    d1, _ = T.decode_step(params, cfg_q, cache_q, nt)
+    rel = float(jnp.linalg.norm(d1 - d0) / (jnp.linalg.norm(d0) + 1e-9))
+    assert rel < 0.1, rel
