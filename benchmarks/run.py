@@ -173,6 +173,46 @@ def bench_roofline_table():
     print_roofline_csv()
 
 
+def bench_runtime_config_switch():
+    """The PR-1 tentpole quantified: cost of changing the error config.
+
+    static  — config baked into the trace: every new config pays a full
+              jit trace+compile (the pre-PR-1 behavior);
+    runtime — config as a traced int32: switching is one gather, all 32
+              configs share one executable.
+    """
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import time_call
+    from repro.core.approx_matmul import approx_matmul_operand
+    rng = np.random.default_rng(0)
+    m = k = n = 512
+    a8 = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    b8 = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+
+    # static: fresh jit per config (cache miss == the recompile cost)
+    t0 = time.perf_counter()
+    for c in range(32):
+        f = jax.jit(lambda x, w, c=c: approx_matmul_operand(x, w, c))
+        jax.block_until_ready(f(a8, b8))
+    static_us = (time.perf_counter() - t0) * 1e6 / 32
+
+    f_rt = jax.jit(approx_matmul_operand)
+    jax.block_until_ready(f_rt(a8, b8, jnp.asarray(0, jnp.int32)))  # warmup
+
+    def sweep():
+        out = None
+        for c in range(32):
+            out = f_rt(a8, b8, jnp.asarray(c, jnp.int32))
+        return out
+
+    runtime_us = time_call(sweep, iters=5) / 32
+    print(f"runtime_config_switch,{runtime_us:.1f},"
+          f"static_recompile_per_cfg={static_us:.1f}us;"
+          f"speedup={static_us/max(runtime_us, 1e-9):.0f}x;"
+          f"executables=1_vs_32")
+
+
 BENCHES = {
     "table1": bench_table1_multiplier_metrics,
     "fig5": bench_fig5_power_improvement,
@@ -183,6 +223,7 @@ BENCHES = {
     "pallas": bench_pallas_kernels_interpret,
     "lm_energy": bench_lm_energy_model,
     "roofline": bench_roofline_table,
+    "runtime_config": bench_runtime_config_switch,
 }
 
 

@@ -23,8 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .approx_multiplier import (CONFIG_TABLE, N_CONFIGS, config_params,
-                                exhaustive_products)
+from .approx_multiplier import (CONFIG_TABLE, N_CONFIGS,
+                                OPERAND_PARAM_TABLE, exhaustive_products,
+                                operand_params)
 from .quantization import QTensor, truncate_operand_lsb
 
 # ---------------------------------------------------------------------------
@@ -32,6 +33,7 @@ from .quantization import QTensor, truncate_operand_lsb
 # ---------------------------------------------------------------------------
 
 _LUT_CACHE: dict[int, np.ndarray] = {}
+_LUT_STACK: list[np.ndarray] = []      # lazily built (32, 128, 128) stack
 
 
 def _lut(config: int) -> np.ndarray:
@@ -40,14 +42,27 @@ def _lut(config: int) -> np.ndarray:
     return _LUT_CACHE[config]
 
 
-def approx_matmul_lut(a_q, b_q, config: int):
+def _lut_stack() -> np.ndarray:
+    """All 32 multiplier tables stacked — 2 MiB, gathered by a traced
+    config index so the bit-exact oracle is runtime-switchable too."""
+    if not _LUT_STACK:
+        _LUT_STACK.append(np.stack([_lut(c) for c in range(N_CONFIGS)]))
+    return _LUT_STACK[0]
+
+
+def approx_matmul_lut(a_q, b_q, config):
     """Bit-exact approximate matmul on int8 values.
 
     a_q: (..., M, K) int8, b_q: (K, N) int8 -> (..., M, N) int32.
     Each scalar product is looked up in the hardware multiplier table;
     signs handled by XOR (sign product), matching the paper MAC.
+    `config` may be a traced int32 scalar (table row gathered at
+    runtime) or a Python int (single table baked into the trace).
     """
-    lut = jnp.asarray(_lut(config))
+    if isinstance(config, jax.Array):
+        lut = jnp.asarray(_lut_stack())[jnp.asarray(config, jnp.int32)]
+    else:
+        lut = jnp.asarray(_lut(config))
     a = a_q.astype(jnp.int32)
     b = b_q.astype(jnp.int32)
     a_mag, a_sign = jnp.abs(a), jnp.sign(a)
@@ -72,7 +87,27 @@ def approx_matmul_lut_np(a_q: np.ndarray, b_q: np.ndarray, config: int) -> np.nd
 # Operand-truncation path (TPU-native)
 # ---------------------------------------------------------------------------
 
-def approx_matmul_operand(a_q, b_q, config: int,
+def gather_operand_params(config):
+    """(depth_a, depth_b, gate, rtn) int32 scalars for a TRACED config.
+
+    One gather from the frozen (32, 4) OPERAND_PARAM_TABLE — the runtime
+    replacement for the Python branch on a static config, so switching
+    configs between calls retraces nothing.
+    """
+    row = jnp.asarray(OPERAND_PARAM_TABLE)[jnp.asarray(config, jnp.int32)]
+    return row[..., 0], row[..., 1], row[..., 2], row[..., 3]
+
+
+def resolve_operand_params(config):
+    """(depth_a, depth_b, gate, rtn) for a Python-int OR traced config —
+    the single static/traced dispatch shared by every operand-truncation
+    call site (dense matmul, MoE expert einsums, the Pallas wrapper)."""
+    if isinstance(config, jax.Array):
+        return gather_operand_params(config)
+    return operand_params(int(config))
+
+
+def approx_matmul_operand(a_q, b_q, config,
                           preferred_element_type=jnp.int32):
     """Operand-LSB-truncated exact matmul — the MXU-executable adaptation.
 
@@ -81,14 +116,16 @@ def approx_matmul_operand(a_q, b_q, config: int,
     round-to-nearest, TRUNC/LOA floor.  depth is split across the two
     operands (ceil on weights, floor on activations) so the product-level
     error magnitude tracks the product-truncation model.
+
+    `config` is a Python int (static specialization, the original path)
+    or a traced int32 scalar: the per-config parameters are then gathered
+    from OPERAND_PARAM_TABLE inside the trace, so one compiled executable
+    serves all 32 configs.  Both paths are bit-identical per config.
     """
-    if config != 0:
-        mode, t, gate = config_params(config)
-        rtn = mode in (1, 2)
-        t_a = t // 2
-        t_b = t - t_a
-        a_q = truncate_operand_lsb(a_q, t_a, gate, rtn)
-        b_q = truncate_operand_lsb(b_q, t_b, gate, rtn)
+    if isinstance(config, jax.Array) or config != 0:
+        depth_a, depth_b, gate, rtn = resolve_operand_params(config)
+        a_q = truncate_operand_lsb(a_q, depth_a, gate, rtn)
+        b_q = truncate_operand_lsb(b_q, depth_b, gate, rtn)
     return jax.lax.dot_general(
         a_q, b_q,
         dimension_numbers=(((a_q.ndim - 1,), (0,)), ((), ())),

@@ -96,6 +96,32 @@ def config_params(config: int) -> tuple[int, int, int]:
     return CONFIG_TABLE[config - 1]
 
 
+def operand_params(config: int) -> tuple[int, int, int, int]:
+    """(depth_a, depth_b, gate, rtn) of the operand-truncation adaptation.
+
+    The product truncation depth t splits across the two operands (floor
+    on activations, ceil on weights).  ROUND/COMP/LOA modes map to
+    round-to-nearest operand truncation — LOA's lower-part OR keeps the
+    expected product near exact, which floor truncation would model as
+    twice the error (the cfg-8 operand-vs-LUT divergence); only plain
+    TRUNC floors.  This is the single definition of the mapping used by
+    the XLA path, the Pallas kernel, and OPERAND_PARAM_TABLE below.
+    Config 0 -> all zeros (exact).
+    """
+    if config == 0:
+        return 0, 0, 0, 0
+    mode, t, gate = config_params(config)
+    return t // 2, t - t // 2, gate, int(mode != MODE_TRUNC)
+
+
+# (32, 4) int32 rows of (depth_a, depth_b, gate, rtn), indexed by config.
+# Gathering a row with a *traced* int32 config is what makes the error
+# configuration a runtime value: one compiled executable serves all 32
+# configs (the paper's dynamic power knob, PR 1).
+OPERAND_PARAM_TABLE = np.asarray(
+    [operand_params(c) for c in range(N_CONFIGS)], dtype=np.int32)
+
+
 def _as_xp(a):
     """Pick numpy vs jax.numpy based on input type (oracle runs in numpy)."""
     if isinstance(a, np.ndarray) or np.isscalar(a):

@@ -116,8 +116,19 @@ class DynamicPowerController:
                             default=None)
                 if worst is None:
                     break
-                assignment[worst] = 0
+                # step the worst layer DOWN to the next-lower probe config
+                # instead of resetting it to exact: a one-config overshoot
+                # should cost one notch of saving, not all of it (the
+                # reset variant discarded recoverable savings — PR 1).
+                assignment[worst] = self._step_down(assignment[worst])
         return assignment
+
+    def _step_down(self, config: int) -> int:
+        """Next probe config with strictly lower saving than `config`
+        (0 = exact when none is lower)."""
+        lower = [c for c in self.probe_configs
+                 if MAC_SAVING_FRAC[c] < MAC_SAVING_FRAC[config]]
+        return max(lower, key=lambda c: MAC_SAVING_FRAC[c], default=0)
 
     def _delta(self, layer: str, config: int) -> float:
         if config == 0:

@@ -110,24 +110,40 @@ def _fq_bwd(axis, _, g):
 fake_quant.defvjp(_fq_fwd, _fq_bwd)
 
 
-def truncate_operand_lsb(q_values, depth: int, gate: int, round_to_nearest: bool = True):
+def truncate_operand_lsb(q_values, depth, gate, round_to_nearest=True):
     """TPU-native adaptation of the error-config knob (DESIGN.md §2).
 
     Truncates `depth` low magnitude bits of int8 values whose magnitude is
     >= `gate` (per-operand gating; pair-gating is not expressible as an
     elementwise pre-matmul transform).  Executable before an exact MXU
     matmul.  round_to_nearest halves the expected truncation error.
+
+    `depth`/`gate`/`round_to_nearest` may be Python ints/bools (static —
+    the selects below constant-fold under jit) OR traced int32 scalars,
+    so the error config can change per call without recompilation.  ONE
+    body serves both, so they are bit-identical by construction for
+    every config, including depth == 0 (strict identity, even for the
+    signed-magnitude-unrepresentable int8 value -128).
     """
-    if depth <= 0:
+    if not any(isinstance(p, jax.Array)
+               for p in (depth, gate, round_to_nearest)) and depth <= 0:
         return q_values
+    # depth>0 / gate>0 / rtn branches expressed as selects: depth==0
+    # reduces to the identity (guarded explicitly — the QMAX clamp must
+    # not touch an untruncated magnitude of 128), and gate==0 gates
+    # nothing (every magnitude is >= 0).
+    depth = jnp.asarray(depth, jnp.int32)
+    gate = jnp.asarray(gate, jnp.int32)
+    rtn = jnp.asarray(round_to_nearest, jnp.int32)
     v = q_values.astype(jnp.int32)
     mag = jnp.abs(v)
     sign = jnp.sign(v)
-    low_mask = (1 << depth) - 1
-    if round_to_nearest:
-        tmag = jnp.minimum((mag + (1 << (depth - 1))) & ~low_mask, QMAX)
-    else:
-        tmag = mag & ~low_mask
-    gated = mag >= gate if gate > 0 else jnp.ones_like(mag, dtype=bool)
-    new_mag = jnp.where(gated, tmag, mag)
+    low_mask = jnp.left_shift(1, depth) - 1
+    half = jnp.where(depth > 0,
+                     jnp.left_shift(1, jnp.maximum(depth - 1, 0)), 0)
+    tmag = jnp.where(rtn != 0,
+                     jnp.minimum((mag + half) & ~low_mask, QMAX),
+                     mag & ~low_mask)
+    tmag = jnp.where(depth > 0, tmag, mag)
+    new_mag = jnp.where(mag >= gate, tmag, mag)
     return (sign * new_mag).astype(q_values.dtype)

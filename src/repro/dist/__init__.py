@@ -1,0 +1,2 @@
+"""Distribution utilities: logical-axis sharding, fault tolerance,
+sequence-parallel decode attention, pipeline parallelism."""

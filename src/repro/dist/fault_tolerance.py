@@ -1,0 +1,136 @@
+"""Fault tolerance for long training runs: auto-resume from the latest
+checkpoint, bounded failure replay, straggler detection, preemption.
+
+``resilient_train_loop`` is the single entry point used by the launchers
+and examples: it restores from the checkpointer when checkpoints exist
+(restarted worker), replays failed steps from the last checkpoint (the
+data iterator is step-indexed, so replay is deterministic), and records
+per-step wall time into a ``StragglerMonitor``.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker that flags outlier steps.
+
+    A step slower than ``threshold * ewma`` (after ``warmup_steps``) is
+    flagged via ``on_straggler(step, seconds)`` and is NOT folded into
+    the EWMA — one straggler must not inflate the baseline and mask the
+    next one.
+    """
+
+    def __init__(self, threshold: float = 2.0, warmup_steps: int = 5,
+                 alpha: float = 0.1):
+        self.threshold = threshold
+        self.warmup_steps = warmup_steps
+        self.alpha = alpha
+        self.ewma: float | None = None
+        self.n = 0
+        self.flagged: list[int] = []
+
+    def record(self, step: int, seconds: float,
+               on_straggler: Callable[[int, float], None] | None = None):
+        if (self.ewma is not None and self.n >= self.warmup_steps
+                and seconds > self.threshold * self.ewma):
+            self.flagged.append(step)
+            if on_straggler is not None:
+                on_straggler(step, seconds)
+            return
+        self.ewma = (seconds if self.ewma is None
+                     else self.ewma + self.alpha * (seconds - self.ewma))
+        self.n += 1
+
+
+class PreemptionHandler:
+    """SIGTERM-aware graceful shutdown flag (cloud spot/preemptible VMs)."""
+
+    SIGNALS = (signal.SIGTERM,)
+
+    def __init__(self):
+        self.preempted = False
+        self._previous: dict[int, Any] = {}
+
+    def _handler(self, signum, frame):
+        self.preempted = True
+
+    def install(self):
+        for sig in self.SIGNALS:
+            self._previous[sig] = signal.getsignal(sig)
+            try:
+                signal.signal(sig, self._handler)
+            except ValueError:   # not on the main thread
+                pass
+
+    def uninstall(self):
+        for sig, prev in self._previous.items():
+            try:
+                signal.signal(sig, prev)
+            except ValueError:
+                pass
+        self._previous.clear()
+
+
+def resilient_train_loop(*, train_step, state, data_iter, checkpointer,
+                         total_steps: int, checkpoint_every: int = 100,
+                         max_retries: int = 3,
+                         fail_injector: Callable[[int], None] | None = None,
+                         on_metrics: Callable[[int, dict], None] | None = None,
+                         monitor: StragglerMonitor | None = None,
+                         preemption: PreemptionHandler | None = None):
+    """Run ``train_step`` for ``total_steps`` steps with auto-resume.
+
+    train_step(state, batch) -> (state, metrics); data_iter(step) -> batch.
+    Checkpoints are labeled with the number of COMPLETED steps, written
+    every ``checkpoint_every`` steps and at the end, so a restarted
+    worker resumes exactly where the label says.  On a step failure the
+    loop restores the last checkpoint (or the initial state) and replays;
+    more than ``max_retries`` failures re-raises.
+
+    Returns (state, monitor, completed_steps).
+    """
+    monitor = monitor or StragglerMonitor()
+    initial = state
+    start = 0
+    latest = checkpointer.latest_step()
+    if latest is not None and latest <= total_steps:
+        state, _ = checkpointer.restore(state, step=latest)
+        start = latest
+
+    failures = 0
+    step = start
+    while step < total_steps:
+        if preemption is not None and preemption.preempted:
+            checkpointer.save(step, state)
+            break
+        t0 = time.time()
+        try:
+            if fail_injector is not None:
+                fail_injector(step)
+            batch = data_iter(step)
+            state, metrics = train_step(state, batch)
+        except Exception:
+            failures += 1
+            if failures > max_retries:
+                raise
+            latest = checkpointer.latest_step()
+            if latest is not None and latest <= total_steps:
+                state, _ = checkpointer.restore(initial, step=latest)
+                step = latest
+            else:
+                state = initial
+                step = 0
+            continue
+        jax.block_until_ready(jax.tree.leaves(state)[0])
+        monitor.record(step, time.time() - t0)
+        step += 1
+        if on_metrics is not None:
+            on_metrics(step, metrics)
+        if step % checkpoint_every == 0 or step == total_steps:
+            checkpointer.save(step, state)
+    return state, monitor, step

@@ -7,6 +7,12 @@ dot_generals accumulating in an int32 VMEM scratch tile.  The truncation
 is a handful of VPU integer ops per element on tiles already resident in
 VMEM — the approximation costs no extra HBM traffic.
 
+Runtime reconfigurability (the paper's actual contribution): the
+per-call (depth_a, depth_b, gate, rtn) parameters arrive as a (4,)
+int32 *scalar-prefetch* operand in SMEM, not as closure constants, so
+ONE compiled kernel serves all 32 error configurations — switching the
+power mode between calls retraces and recompiles nothing.
+
 Tiling: grid (M/bm, N/bn, K/bk), A tile (bm, bk) and B tile (bk, bn) in
 VMEM, int32 accumulator scratch (bm, bn).  bm = bn = 128 and bk = 256
 keep the MXU dims 128-aligned and the working set
@@ -18,41 +24,33 @@ accumulator carries across k-steps on TPU.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.approx_multiplier import config_params
+from repro.core.approx_multiplier import OPERAND_PARAM_TABLE
+from repro.core.quantization import truncate_operand_lsb
+from repro.kernels.compat import CompilerParams as _CompilerParams
 
 
-def _truncate(v, depth: int, gate: int, rtn: bool):
-    """Elementwise int8->int32 magnitude truncation (VPU ops only)."""
-    v = v.astype(jnp.int32)
-    if depth <= 0:
-        return v
-    mag = jnp.abs(v)
-    sign = jnp.sign(v)
-    low_mask = (1 << depth) - 1
-    if rtn:
-        tmag = jnp.minimum((mag + (1 << (depth - 1))) & ~low_mask, 127)
-    else:
-        tmag = mag & ~low_mask
-    if gate > 0:
-        tmag = jnp.where(mag >= gate, tmag, mag)
-    return sign * tmag
+def _truncate(v, depth, gate, rtn):
+    """Elementwise int8->int32 magnitude truncation (VPU ops only).
+
+    depth/gate/rtn are traced int32 scalars read from SMEM, so this is
+    exactly the traced branch of core.quantization.truncate_operand_lsb
+    — ONE definition of the bit-level semantics shared by the XLA path
+    and the kernel (pure jnp integer ops, pallas-traceable)."""
+    return truncate_operand_lsb(v, depth, gate, rtn).astype(jnp.int32)
 
 
-def _kernel(a_ref, b_ref, o_ref, acc_ref, *, depth_a, depth_b, gate, rtn,
-            k_steps):
+def _kernel(cfg_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = _truncate(a_ref[...], depth_a, gate, rtn)
-    b = _truncate(b_ref[...], depth_b, gate, rtn)
+    a = _truncate(a_ref[...], cfg_ref[0], cfg_ref[2], cfg_ref[3])
+    b = _truncate(b_ref[...], cfg_ref[1], cfg_ref[2], cfg_ref[3])
     acc_ref[...] += jax.lax.dot_general(
         a, b, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
@@ -62,11 +60,21 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, depth_a, depth_b, gate, rtn,
         o_ref[...] = acc_ref[...]
 
 
-def approx_mac_matmul(a, b, config: int = 0, *, bm: int = 128,
+def config_operand(config) -> jax.Array:
+    """(4,) int32 scalar-prefetch operand for a static or traced config."""
+    if isinstance(config, jax.Array):
+        return jnp.asarray(OPERAND_PARAM_TABLE)[
+            jnp.asarray(config, jnp.int32)]
+    return jnp.asarray(OPERAND_PARAM_TABLE[int(config)])
+
+
+def approx_mac_matmul(a, b, config=0, *, bm: int = 128,
                       bn: int = 128, bk: int = 256,
                       interpret: bool = False):
     """a: (M, K) int8, b: (K, N) int8 -> (M, N) int32 under `config`.
 
+    `config` may be a Python int or a traced int32 scalar — either way
+    the compiled kernel is config-independent (params ride in SMEM).
     Shapes must be pre-padded to tile multiples (ops.py handles padding).
     """
     m, k = a.shape
@@ -74,28 +82,40 @@ def approx_mac_matmul(a, b, config: int = 0, *, bm: int = 128,
     assert k == k2, (a.shape, b.shape)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
         (m, n, k, bm, bn, bk)
-    if config == 0:
-        depth_a = depth_b = gate = 0
-        rtn = False
-    else:
-        mode, t, gate = config_params(config)
-        rtn = mode in (1, 2)
-        depth_a = t // 2
-        depth_b = t - t // 2
     k_steps = k // bk
-    kernel = functools.partial(_kernel, depth_a=depth_a, depth_b=depth_b,
-                               gate=gate, rtn=rtn, k_steps=k_steps)
+    kernel = lambda *refs: _kernel(*refs, k_steps=k_steps)
+    common = dict(
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    if hasattr(pltpu, "PrefetchScalarGridSpec"):
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(m // bm, n // bn, k_steps),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, ks, cfg: (i, ks)),
+                pl.BlockSpec((bk, bn), lambda i, j, ks, cfg: (ks, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, ks, cfg: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        )
+        return pl.pallas_call(
+            kernel, grid_spec=grid_spec, **common,
+        )(config_operand(config), a, b)
+    # newer jax drops PrefetchScalarGridSpec along with TPUCompilerParams:
+    # pass the (4,) config as a plain SMEM-resident input instead (same
+    # kernel signature; loses only the prefetch hint)
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, k_steps),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bm, bk), lambda i, j, ks: (i, ks)),
             pl.BlockSpec((bk, bn), lambda i, j, ks: (ks, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, ks: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(a, b)
+        **common,
+    )(config_operand(config), a, b)

@@ -26,10 +26,8 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, pad)
 
 
-@partial(jax.jit, static_argnames=("config", "bm", "bn", "bk", "interpret"))
-def approx_mac(a, b, config: int = 0, *, bm: int = 128, bn: int = 128,
-               bk: int = 256, interpret: bool = False):
-    """a: (..., M, K) int8; b: (K, N) int8 -> (..., M, N) int32."""
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _approx_mac_jit(a, b, config, *, bm, bn, bk, interpret):
     assert a.dtype == jnp.int8 and b.dtype == jnp.int8
     lead = a.shape[:-2]
     m, k = a.shape[-2:]
@@ -42,6 +40,18 @@ def approx_mac(a, b, config: int = 0, *, bm: int = 128, bn: int = 128,
                             interpret=interpret)
     out = out[:m_flat, :n]
     return out.reshape(lead + (m, n)) if lead else out
+
+
+def approx_mac(a, b, config=0, *, bm: int = 128, bn: int = 128,
+               bk: int = 256, interpret: bool = False):
+    """a: (..., M, K) int8; b: (K, N) int8 -> (..., M, N) int32.
+
+    `config` is a TRACED int32 argument of the jitted wrapper (it was a
+    static argname before PR 1): sweeping all 32 error configs reuses one
+    compiled executable per shape — the runtime power knob.
+    """
+    return _approx_mac_jit(a, b, jnp.asarray(config, jnp.int32),
+                           bm=bm, bn=bn, bk=bk, interpret=interpret)
 
 
 def approx_dense_pallas(x, w_q, w_scale, config: int = 0, *,

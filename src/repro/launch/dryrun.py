@@ -226,6 +226,8 @@ def lower_cell(arch: str, cell_name: str, mesh, *, serve_dtype=jnp.bfloat16,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax <= 0.4.x wraps it in a list
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
     if stats_only:

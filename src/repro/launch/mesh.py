@@ -16,16 +16,21 @@ import jax
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    """Arbitrary mesh for tests (e.g. (4,2) on 8 forced host devices)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    """Arbitrary mesh (e.g. (4,2) on 8 forced host devices).
+
+    Handles the jax API drift around explicit axis types: on versions
+    that have ``jax.sharding.AxisType`` every axis is created Auto; older
+    versions (<= 0.4.x) only know Auto meshes, so the kwarg is omitted.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants used by the roofline analysis

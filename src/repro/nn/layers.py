@@ -49,8 +49,13 @@ def dense(x, w, *, approx_cfg: int = 0, quantized: bool = False,
     w may be a float array or a QTensor (pre-quantized weights).  When
     `quantized` or approx_cfg>0, runs the integer pipeline: dynamic
     per-tensor int8 activations x int8 weights, operand-truncation
-    approximation, f32 rescale (DESIGN.md §2)."""
-    if approx_cfg > 0 or quantized:
+    approximation, f32 rescale (DESIGN.md §2).
+
+    `approx_cfg` may be a TRACED int32 scalar (the runtime power knob):
+    the integer pipeline then always runs, with the error config gathered
+    per call — traced config 0 is the exact int8 MAC (the paper's exact
+    mode), bit-identical to the static quantized path."""
+    if isinstance(approx_cfg, jax.Array) or approx_cfg > 0 or quantized:
         w_qt = w if isinstance(w, QTensor) else quantize(w, axis=1)
         y = approx_dense(x.astype(jnp.float32), w_qt, approx_cfg)
         return y.astype(compute_dtype)

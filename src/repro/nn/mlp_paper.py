@@ -107,25 +107,41 @@ class QuantizedMLP:
         return np.clip(np.round(np.asarray(x) / self.x_scale),
                        -QMAX, QMAX).astype(np.int8)
 
-    def apply(self, x_q, config: int = 0, method: str = "lut"):
+    @staticmethod
+    def _layer_configs(config):
+        """Normalize `config` to per-layer (hidden, out) configs.
+
+        Accepts a single int (both layers), a length-2 sequence/array of
+        per-layer configs, or traced int32 scalars — the runtime knob
+        extends down to the paper's own 62-30-10 network."""
+        if isinstance(config, (tuple, list)):
+            c1, c2 = config
+            return c1, c2
+        if isinstance(config, (np.ndarray, jax.Array)) \
+                and getattr(config, "ndim", 0) == 1:
+            return config[0], config[1]
+        return config, config
+
+    def apply(self, x_q, config=0, method: str = "lut"):
         """Integer forward pass under error config `config` (jax arrays).
 
         x_q: (B, 62) int8.  Returns (B, 10) int32 logits (accumulator
         domain of the output layer — argmax semantics identical to the
         hardware's maximum-value circuit)."""
         mm = approx_matmul_lut if method == "lut" else approx_matmul_operand
+        c1, c2 = self._layer_configs(config)
         x_q = jnp.asarray(x_q)
-        acc1 = mm(x_q, jnp.asarray(self.w1), config) + jnp.asarray(self.b1)
+        acc1 = mm(x_q, jnp.asarray(self.w1), c1) + jnp.asarray(self.b1)
         acc1 = jnp.maximum(acc1, 0)                       # ReLU (21-bit domain)
         h = jnp.clip(acc1 >> self.shift1, 0, QMAX).astype(jnp.int8)  # saturate
-        acc2 = mm(h, jnp.asarray(self.w2), config) + jnp.asarray(self.b2)
+        acc2 = mm(h, jnp.asarray(self.w2), c2) + jnp.asarray(self.b2)
         return acc2
 
-    def predict(self, x: np.ndarray, config: int = 0, method: str = "lut"):
+    def predict(self, x: np.ndarray, config=0, method: str = "lut"):
         logits = self.apply(self.quantize_input(x), config, method)
         return np.asarray(jnp.argmax(logits, axis=-1))
 
-    def accuracy(self, x: np.ndarray, y: np.ndarray, config: int = 0,
+    def accuracy(self, x: np.ndarray, y: np.ndarray, config=0,
                  method: str = "lut") -> float:
         return float((self.predict(x, config, method) == np.asarray(y)).mean())
 

@@ -457,6 +457,39 @@ def _apply_block(p, kind, x, cfg, *, positions, approx_cfg=0, causal=True,
     raise ValueError(kind)
 
 
+def is_per_layer_cfg(approx_cfg) -> bool:
+    """True when approx_cfg is a (n_layers,) per-layer config vector
+    (0-d arrays are uniform scalar configs, not vectors)."""
+    if isinstance(approx_cfg, (jax.Array, np.ndarray)):
+        return approx_cfg.ndim == 1
+    return isinstance(approx_cfg, (list, tuple))
+
+
+def split_layer_cfgs(approx_cfg, n_scan: int, npat: int):
+    """(scan_part (n_groups, npat), rest_part) of a per-layer vector."""
+    acfg = jnp.asarray(approx_cfg, jnp.int32)
+    scan_part = acfg[:n_scan].reshape(-1, npat) if n_scan else None
+    rest_part = acfg[n_scan:]
+    return scan_part, rest_part
+
+
+def _layer_cfg_plan(blocks, approx_cfg, npat: int):
+    """The ONE place the layer->config layout is mapped onto a blocks
+    tree: returns (n_groups, acfg_scan, acfg_rest).  acfg parts are None
+    for a uniform (scalar) approx_cfg; callers then select per layer
+    with `approx_cfg if ac is None else ac[j]` (scan) / `acfg_rest[r]`
+    (rest layers).  Shared by _run_blocks, prefill, and decode_step so
+    the three paths cannot drift."""
+    n_groups = (jax.tree.leaves(blocks["scan"])[0].shape[0]
+                if "scan" in blocks else 0)
+    if is_per_layer_cfg(approx_cfg):
+        acfg_scan, acfg_rest = split_layer_cfgs(approx_cfg,
+                                                n_groups * npat, npat)
+    else:
+        acfg_scan = acfg_rest = None
+    return n_groups, acfg_scan, acfg_rest
+
+
 def _run_blocks(blocks, x, cfg, *, positions, approx_cfg=0, causal=True,
                 enc_out=None, pattern=None):
     pattern = pattern or cfg.pattern
@@ -464,12 +497,19 @@ def _run_blocks(blocks, x, cfg, *, positions, approx_cfg=0, causal=True,
 
     from repro.dist.sharding import lsc
 
-    def group_body(x, gp):
+    # approx_cfg is a Python int (static), a traced int32 scalar (uniform
+    # runtime config), or a (n_layers,) vector (per-layer runtime
+    # configs, e.g. a DynamicPowerController allocation).  The vector's
+    # scanned prefix rides through lax.scan alongside the layer params.
+    n_groups, acfg_scan, acfg_rest = _layer_cfg_plan(blocks, approx_cfg,
+                                                     npat)
+
+    def group_body(x, gp, ac):
         for j, kind in enumerate(pattern):
             x = lsc(x, "batch", None, None)
             x = _apply_block(gp[f"b{j}"], kind, x, cfg, positions=positions,
-                             approx_cfg=approx_cfg, causal=causal,
-                             enc_out=enc_out)
+                             approx_cfg=approx_cfg if ac is None else ac[j],
+                             causal=causal, enc_out=enc_out)
         return x
 
     if "scan" in blocks:
@@ -480,19 +520,22 @@ def _run_blocks(blocks, x, cfg, *, positions, approx_cfg=0, causal=True,
                       else jax.checkpoint_policies.nothing_saveable)
             body = jax.checkpoint(group_body, policy=policy)
         if cfg.scan_layers:
-            x, _ = jax.lax.scan(lambda c, gp: (body(c, gp), None),
-                                x, blocks["scan"])
+            x, _ = jax.lax.scan(
+                lambda c, t: (body(c, t[0], t[1]), None),
+                x, (blocks["scan"], acfg_scan))
         else:
-            n_groups = jax.tree.leaves(blocks["scan"])[0].shape[0]
             for g in range(n_groups):
                 gp = jax.tree.map(lambda a: a[g], blocks["scan"])
-                x = body(x, gp)
+                x = body(x, gp,
+                         acfg_scan[g] if acfg_scan is not None else None)
     r = 0
     while f"rest{r}" in blocks:
         # rest layers follow n_groups*npat scanned layers, so their kind
         # index reduces to r % npat
         x = _apply_block(blocks[f"rest{r}"], pattern[r % npat], x, cfg,
-                         positions=positions, approx_cfg=approx_cfg,
+                         positions=positions,
+                         approx_cfg=(approx_cfg if acfg_rest is None
+                                     else acfg_rest[r]),
                          causal=causal, enc_out=enc_out)
         r += 1
     return x
@@ -523,8 +566,11 @@ def encode(params, cfg, enc_embeds):
 
 
 def forward(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
-            enc_embeds=None, approx_cfg: int = 0):
-    """Full-sequence hidden states (B, S_total, d)."""
+            enc_embeds=None, approx_cfg=0):
+    """Full-sequence hidden states (B, S_total, d).
+
+    approx_cfg: Python int (static), traced int32 scalar (uniform
+    runtime config), or (n_layers,) per-layer config vector."""
     from repro.dist.sharding import lsc
     tokens = lsc(tokens, "batch", None)
     x = embed_tokens(params, cfg, tokens)
@@ -550,7 +596,7 @@ def logits_for(params, cfg, hidden):
     return logits
 
 
-def lm_loss(params, cfg: ModelConfig, batch, *, approx_cfg: int = 0):
+def lm_loss(params, cfg: ModelConfig, batch, *, approx_cfg=0):
     """Chunked-vocab cross entropy.  batch: tokens/labels (+ stubs).
     labels == -1 are masked (vision prefix positions etc.)."""
     hidden = forward(params, cfg, batch["tokens"],
@@ -808,8 +854,11 @@ def _decode_block(p, kind, x_t, cl, cfg, pos, *, approx_cfg=0):
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, *,
-                approx_cfg: int = 0):
-    """token: (B, 1) int32 -> (logits (B, V), new_cache)."""
+                approx_cfg=0):
+    """token: (B, 1) int32 -> (logits (B, V), new_cache).
+
+    approx_cfg: Python int, traced int32 scalar, or per-layer
+    (n_layers,) vector — see _run_blocks."""
     from repro.dist.sharding import lsc
     token = lsc(token, "batch", None)
     x = embed_tokens(params, cfg, token)
@@ -819,27 +868,33 @@ def decode_step(params, cfg: ModelConfig, cache, token, *,
     pos = cache["pos"]
     new_cache: Params = {"pos": pos + 1}
 
+    npat = len(cfg.pattern)
+    n_groups, acfg_scan, acfg_rest = _layer_cfg_plan(params["blocks"],
+                                                     approx_cfg, npat)
+
     if "scan" in params["blocks"]:
-        def scan_fn(x, gp_cl):
-            gp, cl = gp_cl
+        def scan_fn(x, gp_cl_ac):
+            gp, cl, ac = gp_cl_ac
             ncl = {}
             for j, kind in enumerate(cfg.pattern):
                 x = lsc(x, "batch", None, None)
-                x, c = _decode_block(gp[f"b{j}"], kind, x, cl[f"b{j}"],
-                                     cfg, pos, approx_cfg=approx_cfg)
+                x, c = _decode_block(
+                    gp[f"b{j}"], kind, x, cl[f"b{j}"], cfg, pos,
+                    approx_cfg=approx_cfg if ac is None else ac[j])
                 ncl[f"b{j}"] = c
             return x, ncl
         if cfg.scan_layers:
             x, new_scan = jax.lax.scan(scan_fn, x, (params["blocks"]["scan"],
-                                                    cache["scan"]))
+                                                    cache["scan"],
+                                                    acfg_scan))
         else:
-            n_groups = jax.tree.leaves(params["blocks"]["scan"])[0].shape[0]
             outs = []
             for g in range(n_groups):
                 gp_cl = jax.tree.map(lambda a: a[g],
                                      (params["blocks"]["scan"],
                                       cache["scan"]))
-                x, ncl = scan_fn(x, gp_cl)
+                ac = acfg_scan[g] if acfg_scan is not None else None
+                x, ncl = scan_fn(x, gp_cl + (ac,))
                 outs.append(ncl)
             new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         new_cache["scan"] = new_scan
@@ -848,7 +903,8 @@ def decode_step(params, cfg: ModelConfig, cache, token, *,
         kind = cfg.pattern[r % len(cfg.pattern)]
         x, c = _decode_block(params["blocks"][f"rest{r}"], kind, x,
                              cache[f"rest{r}"], cfg, pos,
-                             approx_cfg=approx_cfg)
+                             approx_cfg=(approx_cfg if acfg_rest is None
+                                         else acfg_rest[r]))
         new_cache[f"rest{r}"] = c
         r += 1
     x = _apply_norm(params["final_norm"], x, cfg)
@@ -858,7 +914,7 @@ def decode_step(params, cfg: ModelConfig, cache, token, *,
 
 def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
             enc_embeds=None, max_len: int | None = None,
-            approx_cfg: int = 0):
+            approx_cfg=0):
     """Sequence prefill: returns (last-token logits, populated cache).
 
     Implementation: full forward for activations; K/V recomputed per
@@ -884,7 +940,11 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
         enc_out = encode(params, cfg, enc_embeds)
     positions = jnp.arange(x.shape[1])[None]
 
-    def fill_block(p, kind, x, cl):
+    npat = len(cfg.pattern)
+    n_groups, acfg_scan, acfg_rest = _layer_cfg_plan(params["blocks"],
+                                                     approx_cfg, npat)
+
+    def fill_block(p, kind, x, cl, approx_cfg=approx_cfg):
         from .layers import apply_rope
         x = lsc(x, "batch", None, None)
         if kind in ("global", "local"):
@@ -945,24 +1005,27 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
 
     new_cache: Params = {"pos": jnp.asarray(s, jnp.int32)}
     if "scan" in params["blocks"]:
-        def scan_fn(x, gp_cl):
-            gp, cl = gp_cl
+        def scan_fn(x, gp_cl_ac):
+            gp, cl, ac = gp_cl_ac
             ncl = {}
             for j, kind in enumerate(cfg.pattern):
-                x, c = fill_block(gp[f"b{j}"], kind, x, cl[f"b{j}"])
+                x, c = fill_block(
+                    gp[f"b{j}"], kind, x, cl[f"b{j}"],
+                    approx_cfg=approx_cfg if ac is None else ac[j])
                 ncl[f"b{j}"] = c
             return x, ncl
         if cfg.scan_layers:
             x, new_scan = jax.lax.scan(scan_fn, x, (params["blocks"]["scan"],
-                                                    cache["scan"]))
+                                                    cache["scan"],
+                                                    acfg_scan))
         else:
-            n_groups = jax.tree.leaves(params["blocks"]["scan"])[0].shape[0]
             outs = []
             for g in range(n_groups):
                 gp_cl = jax.tree.map(lambda a: a[g],
                                      (params["blocks"]["scan"],
                                       cache["scan"]))
-                x, ncl = scan_fn(x, gp_cl)
+                ac = acfg_scan[g] if acfg_scan is not None else None
+                x, ncl = scan_fn(x, gp_cl + (ac,))
                 outs.append(ncl)
             new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
         new_cache["scan"] = new_scan
@@ -970,7 +1033,9 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
     while f"rest{r}" in params["blocks"]:
         kind = cfg.pattern[r % len(cfg.pattern)]
         x, c = fill_block(params["blocks"][f"rest{r}"], kind, x,
-                          cache[f"rest{r}"])
+                          cache[f"rest{r}"],
+                          approx_cfg=(approx_cfg if acfg_rest is None
+                                      else acfg_rest[r]))
         new_cache[f"rest{r}"] = c
         r += 1
     x = _apply_norm(params["final_norm"], x, cfg)

@@ -6,25 +6,54 @@ every tick; a request queue feeds empty slots via per-request prefill
 continuous-batching control loop in its jax-native form: python-side
 scheduling around two jitted functions with static shapes.
 
-The engine exposes the paper's knob end-to-end: ``approx_cfg`` selects
-the MAC error configuration for *all* GEMMs of the model at request
-time, and ``energy_report`` integrates the calibrated per-MAC energy
-model over the executed steps (DESIGN.md §2: energy is modeled — the
-knob's effect on accuracy is real, measured on the generated tokens).
+The engine exposes the paper's knob end-to-end **as a runtime value**:
+the per-layer error-config vector is a traced int32 argument of both
+jitted functions, so
+
+  * each request may carry its own ``approx_cfg`` (applied to its
+    prefill, and folded into the decode pool config);
+  * ``set_approx_cfg`` / ``apply_allocation`` retune live slots between
+    ticks — a power-budget scheduler can sweep all 32 configs with ZERO
+    recompilations (asserted in tests/test_runtime_config.py);
+  * ``energy_report`` integrates the calibrated per-MAC energy model
+    over the executed steps at the configs they actually ran
+    (DESIGN.md §2: energy is modeled — the knob's effect on accuracy is
+    real, measured on the generated tokens).
+
+Pool semantics: decode runs one batched step for all slots, so per
+layer the pool runs the LOWEST-ERROR config among the active requests'
+vectors (ranked by measured MRED — config index is ordered by energy
+saving, in which error is non-monotone) — a slot never executes at a
+higher-error config than its request asked for.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.approx_multiplier import N_CONFIGS
 from repro.core.power_model import MAC_SAVING_FRAC, energy_per_mac_pj
 from repro.nn import transformer as T
 from .sampling import sample
+
+_ENERGY_PJ = np.asarray([energy_per_mac_pj(c)
+                         for c in range(N_CONFIGS)])
+_MRED_CACHE: list[np.ndarray] = []
+
+
+def _mred_table() -> np.ndarray:
+    """Per-config measured MRED — the error ranking for the pool join
+    (exhaustive over the 128x128 magnitude space, computed once)."""
+    if not _MRED_CACHE:
+        from repro.core.error_metrics import multiplier_error_stats
+        _MRED_CACHE.append(np.asarray(
+            [multiplier_error_stats(c).mred for c in range(N_CONFIGS)]))
+    return _MRED_CACHE[0]
 
 
 @dataclass
@@ -33,6 +62,8 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
+    approx_cfg: Any = None        # None -> engine default; int or
+                                  # (n_layers,) per-layer vector
     submitted_at: float = field(default_factory=time.time)
     tokens: list = field(default_factory=list)
     done: bool = False
@@ -42,34 +73,103 @@ class Request:
 
 class Engine:
     def __init__(self, params, cfg: T.ModelConfig, *, max_batch: int = 4,
-                 max_len: int = 512, approx_cfg: int = 0, seed: int = 0):
+                 max_len: int = 512, approx_cfg=0, seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
-        self.approx_cfg = approx_cfg
+        self.approx_cfg = self._as_layer_vector(
+            0 if approx_cfg is None else approx_cfg)
         self.rng = jax.random.PRNGKey(seed)
         self.queue: list[Request] = []
         self.slots: list[Request | None] = [None] * max_batch
+        self.slot_cfg = np.tile(self.approx_cfg, (max_batch, 1))
+        # slots whose request carried its OWN approx_cfg are pinned to
+        # it; unpinned slots follow the engine config live, so
+        # set_approx_cfg retunes in-flight generation at the next tick
+        self.slot_pinned = np.zeros(max_batch, dtype=bool)
         self.cache, _ = T.init_cache(cfg, max_batch, max_len)
         self.slot_pos = np.zeros(max_batch, dtype=np.int64)
         self.n_decode_steps = 0
         self.n_prefill_tokens = 0
+        self.mac_energy_pj_per_param = 0.0   # sum over tokens of E(cfg)
+        self.exact_energy_pj_per_param = 0.0
         self.completed: list[Request] = []
 
         cfg_ = cfg
-        acfg = approx_cfg
 
+        # approx_cfg is a TRACED (n_layers,) int32 argument: retuning the
+        # engine or mixing request configs never retraces (PR 1).
         @jax.jit
-        def _decode(params, cache, token):
+        def _decode(params, cache, token, acfg):
             return T.decode_step(params, cfg_, cache, token,
                                  approx_cfg=acfg)
 
         self._decode = _decode
         self._prefill = jax.jit(
-            lambda params, tokens: T.prefill(params, cfg_, tokens,
-                                             max_len=max_len,
-                                             approx_cfg=acfg))
+            lambda params, tokens, acfg: T.prefill(params, cfg_, tokens,
+                                                   max_len=max_len,
+                                                   approx_cfg=acfg))
+
+    # -- config management ----------------------------------------------
+    def _as_layer_vector(self, approx_cfg) -> np.ndarray:
+        """Normalize int / sequence / None to a (n_layers,) int32 vector."""
+        if approx_cfg is None:
+            return self.approx_cfg.copy()
+        vec = np.asarray(approx_cfg, dtype=np.int32)
+        if vec.ndim == 0:
+            vec = np.full(self.cfg.n_layers, int(vec), np.int32)
+        assert vec.shape == (self.cfg.n_layers,), \
+            (vec.shape, self.cfg.n_layers)
+        assert ((0 <= vec) & (vec < N_CONFIGS)).all(), vec
+        return vec
+
+    def set_approx_cfg(self, approx_cfg):
+        """Live retune: from the next tick on, every active slot whose
+        request did not pin its own config — plus all future
+        admissions — runs at this config.  No recompilation (the config
+        is a traced argument)."""
+        self.approx_cfg = self._as_layer_vector(approx_cfg)
+
+    def apply_allocation(self, assignment: Mapping[Any, int]):
+        """Wire a ``DynamicPowerController.allocate`` result in: keys are
+        layer indices or integer-suffixed names ('layer_<i>'), values are
+        configs; layers missing from the assignment stay at their current
+        config.  Free-form controller layer names must be mapped to
+        indices by the caller — unparseable or out-of-range keys raise."""
+        vec = self.approx_cfg.copy()
+        for key, c in assignment.items():
+            if isinstance(key, str):
+                tail = key.rsplit("_", 1)[-1]
+                if not tail.isdigit():
+                    raise ValueError(
+                        f"layer key {key!r}: expected an integer index or "
+                        f"an integer-suffixed name like 'layer_3'")
+                i = int(tail)
+            else:
+                i = int(key)
+            if not 0 <= i < self.cfg.n_layers:
+                raise ValueError(f"layer index {i} (from key {key!r}) out "
+                                 f"of range [0, {self.cfg.n_layers})")
+            vec[i] = int(c)
+        self.set_approx_cfg(vec)
+
+    def _pool_cfg(self) -> np.ndarray:
+        """Decode-pool config: per layer, the lowest-MRED config among
+        active slots (ties broken toward the lower config index), so no
+        request executes at a higher error than it asked for.  Pinned
+        slots contribute their request's config; unpinned slots track
+        the engine's current config, so live retunes take effect on
+        them immediately."""
+        active = [self.slot_cfg[i] if self.slot_pinned[i]
+                  else self.approx_cfg
+                  for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return self.approx_cfg
+        stack = np.stack(active)                       # (k, n_layers)
+        # rank by (mred, config index): argmin returns the first minimum
+        order = np.lexsort((stack, _mred_table()[stack]), axis=0)[0]
+        return np.take_along_axis(stack, order[None, :], axis=0)[0]
 
     # -- request management --------------------------------------------
     def submit(self, req: Request):
@@ -84,15 +184,25 @@ class Engine:
             return pool.at[slot].set(row[0])
         self.cache = jax.tree.map(splice, self.cache, row_cache)
 
+    def _count_energy(self, tokens: int, cfg_vec: np.ndarray):
+        self.mac_energy_pj_per_param += tokens * float(
+            np.mean(_ENERGY_PJ[cfg_vec]))
+        self.exact_energy_pj_per_param += tokens * float(_ENERGY_PJ[0])
+
     def _admit(self):
         for slot in range(self.max_batch):
             if self.slots[slot] is None and self.queue:
                 req = self.queue.pop(0)
+                req_cfg = self._as_layer_vector(req.approx_cfg)
+                self.slot_pinned[slot] = req.approx_cfg is not None
                 tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                logits, row_cache = self._prefill(self.params, tokens)
+                logits, row_cache = self._prefill(self.params, tokens,
+                                                  jnp.asarray(req_cfg))
                 self.n_prefill_tokens += tokens.shape[1]
+                self._count_energy(tokens.shape[1], req_cfg)
                 self._splice_cache(slot, row_cache)
                 self.slot_pos[slot] = tokens.shape[1]
+                self.slot_cfg[slot] = req_cfg
                 self.rng, k = jax.random.split(self.rng)
                 first = sample(logits, k, temperature=req.temperature)
                 req.tokens.append(int(first[0]))
@@ -114,11 +224,15 @@ class Engine:
         # and per-slot validity is handled by each row's own written range
         # (rows beyond a slot's true length hold zeros written at admit).
         pos = int(self.slot_pos[active].max())
+        pool_cfg = self._pool_cfg()
         cache = dict(self.cache)
         cache["pos"] = jnp.asarray(pos, jnp.int32)
         logits, self.cache = self._decode(self.params, cache,
-                                          jnp.asarray(token))
+                                          jnp.asarray(token),
+                                          jnp.asarray(pool_cfg))
         self.n_decode_steps += 1
+        # one token comes out of every active slot this tick
+        self._count_energy(len(active), pool_cfg)
         self.rng, k = jax.random.split(self.rng)
         nxt = np.asarray(sample(logits, k))
         for i in active:
@@ -143,17 +257,22 @@ class Engine:
 
     # -- paper-knob reporting --------------------------------------------
     def energy_report(self) -> dict:
-        """Modeled MAC energy of the work executed so far at this
-        engine's approx_cfg vs exact mode (DESIGN.md §2)."""
+        """Modeled MAC energy of the work executed so far, integrated at
+        the configs each prefill/decode actually ran vs exact mode
+        (DESIGN.md §2).  saving_frac is derived from the SAME integral
+        (1 - modeled/exact), so it reflects executed work, not the
+        engine's current setting; before any work it falls back to the
+        current config's modeled saving."""
         n_params = sum(int(np.prod(p.shape))
                        for p in jax.tree.leaves(self.params))
-        total_tokens = self.n_prefill_tokens + self.n_decode_steps
-        macs = 2.0 * n_params * max(total_tokens, 1) / 2  # ~N MACs/token
-        e_cfg = macs * energy_per_mac_pj(self.approx_cfg) * 1e-12
-        e_exact = macs * energy_per_mac_pj(0) * 1e-12
-        return {"approx_cfg": self.approx_cfg,
+        macs_per_token = 2.0 * n_params / 2   # ~N MACs/token
+        e_cfg = macs_per_token * self.mac_energy_pj_per_param * 1e-12
+        e_exact = macs_per_token * self.exact_energy_pj_per_param * 1e-12
+        saving = (1.0 - e_cfg / e_exact if e_exact > 0 else
+                  float(np.mean(MAC_SAVING_FRAC[self.approx_cfg])))
+        return {"approx_cfg": self.approx_cfg.tolist(),
                 "modeled_mac_energy_j": e_cfg,
                 "exact_mac_energy_j": e_exact,
-                "saving_frac": float(MAC_SAVING_FRAC[self.approx_cfg]),
+                "saving_frac": saving,
                 "decode_steps": self.n_decode_steps,
                 "prefill_tokens": self.n_prefill_tokens}

@@ -3,6 +3,8 @@ the real single-CPU device; multi-device tests spawn subprocesses."""
 import numpy as np
 import pytest
 
+import _hypothesis_compat  # noqa: F401  (installs a hypothesis stub when absent)
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -77,8 +77,8 @@ def test_elastic_restore_onto_sharding(tmp_path):
     t = tree()
     ck.save(3, t)
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
     restored, _ = ck.restore(t, shardings=sh)
     assert restored["params"]["w"].sharding == sh["params"]["w"]

@@ -27,9 +27,9 @@ def run_sub(code: str, timeout=560):
 PRELUDE = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
 assert len(jax.devices()) == 8
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 """
 
 
@@ -114,9 +114,9 @@ print("SP decode attention OK")
 def test_pipeline_forward_matches_sequential():
     run_sub("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh
 assert len(jax.devices()) == 8
-mesh = jax.make_mesh((8,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("stage",))
 from repro.dist.pipeline_par import pipeline_forward
 key = jax.random.PRNGKey(3)
 n_stages, m, mb, d = 8, 4, 2, 16
@@ -146,8 +146,7 @@ sh = NamedSharding(mesh, P("data", "model"))
 t_sharded = {{"w": jax.device_put(t["w"], sh)}}
 ck.save(1, t_sharded)
 # restore onto a different mesh layout
-mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh((2, 4), ("data", "model"))
 sh2 = {{"w": NamedSharding(mesh2, P("model", "data"))}}
 restored, _ = ck.restore(t, shardings=sh2)
 np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(t["w"]))

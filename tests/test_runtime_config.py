@@ -1,0 +1,284 @@
+"""Runtime-switchable error configs (PR 1 tentpole).
+
+Contract: the traced-config paths are BIT-IDENTICAL to the static-config
+reference for every one of the 32 configs, at every level of the stack
+(XLA operand path, LUT oracle, Pallas kernel, paper-MLP datapath), and
+switching configs between calls triggers ZERO recompilations — one
+compiled artifact serves all 32 configs, including through the serving
+engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.approx_matmul import (approx_matmul_lut,
+                                      approx_matmul_operand)
+from repro.core.approx_multiplier import (N_CONFIGS, OPERAND_PARAM_TABLE,
+                                          operand_params)
+from repro.core.quantization import truncate_operand_lsb
+from repro.kernels.approx_mac.ops import _approx_mac_jit, approx_mac
+
+RNG = np.random.default_rng(7)
+A = jnp.asarray(RNG.integers(-127, 128, (32, 64)), jnp.int8)
+B = jnp.asarray(RNG.integers(-127, 128, (64, 48)), jnp.int8)
+
+
+def _t(c):
+    return jnp.asarray(c, jnp.int32)
+
+
+# --- (a) traced == static, bit-identical, all 32 configs -------------------
+
+def test_param_table_matches_static_params():
+    assert OPERAND_PARAM_TABLE.shape == (N_CONFIGS, 4)
+    for c in range(N_CONFIGS):
+        assert tuple(OPERAND_PARAM_TABLE[c]) == operand_params(c)
+
+
+@pytest.mark.parametrize("cfg", range(N_CONFIGS))
+def test_operand_matmul_traced_bit_identical(cfg):
+    ref = approx_matmul_operand(A, B, cfg)
+    out = approx_matmul_operand(A, B, _t(cfg))
+    assert jnp.array_equal(out, ref), cfg
+
+
+def test_operand_matmul_bit_identical_with_int8_min():
+    a = jnp.asarray([[-128, 5, -128, 127]], jnp.int8)
+    b = jnp.asarray(RNG.integers(-128, 128, (4, 8)), jnp.int8)
+    for cfg in range(N_CONFIGS):
+        ref = approx_matmul_operand(a, b, cfg)
+        out = approx_matmul_operand(a, b, _t(cfg))
+        assert jnp.array_equal(out, ref), cfg
+
+
+def test_lut_matmul_traced_bit_identical():
+    a = A[:8, :16]
+    b = B[:16, :8]
+    for cfg in range(N_CONFIGS):
+        assert jnp.array_equal(approx_matmul_lut(a, b, _t(cfg)),
+                               approx_matmul_lut(a, b, cfg)), cfg
+
+
+def test_truncate_operand_traced_bit_identical():
+    # full int8 range INCLUDING -128 (unrepresentable in the paper's
+    # signed-magnitude format and never produced by the quantizer, but a
+    # valid raw input — regression: the traced depth==0 path used to
+    # clamp |−128| to 127 while the static path kept it)
+    v = jnp.arange(-128, 128, dtype=jnp.int8)
+    for cfg in range(N_CONFIGS):
+        d_a, d_b, gate, rtn = operand_params(cfg)
+        for depth in (d_a, d_b):
+            ref = truncate_operand_lsb(v, depth, gate, bool(rtn))
+            out = truncate_operand_lsb(v, _t(depth), _t(gate), _t(rtn))
+            assert jnp.array_equal(out, ref), (cfg, depth)
+
+
+# --- (b) Pallas kernel (interpret mode) matches ----------------------------
+
+@pytest.mark.parametrize("cfg", [0, 1, 5, 8, 13, 16, 24, 31])
+def test_pallas_kernel_traced_config_matches_ref(cfg):
+    ref = approx_matmul_operand(A, B, cfg)
+    out = approx_mac(A, B, _t(cfg), interpret=True)
+    assert out.dtype == jnp.int32
+    assert jnp.array_equal(out, ref), cfg
+
+
+# --- (c) zero recompilation across config sweeps ---------------------------
+
+def test_operand_matmul_no_retrace_over_32_configs():
+    f = jax.jit(approx_matmul_operand)
+    f(A, B, _t(0))
+    n0 = f._cache_size()
+    for cfg in range(N_CONFIGS):
+        f(A, B, _t(cfg))
+    assert f._cache_size() == n0 == 1
+
+
+def test_pallas_kernel_no_retrace_over_32_configs():
+    approx_mac(A, B, 0, interpret=True)
+    n0 = _approx_mac_jit._cache_size()
+    for cfg in range(N_CONFIGS):
+        approx_mac(A, B, cfg, interpret=True)
+    assert _approx_mac_jit._cache_size() == n0
+
+
+# --- paper-MLP datapath: integer logits bit-identical ----------------------
+
+def _toy_qmlp():
+    from repro.nn import mlp_paper as M
+    params = M.init_params(jax.random.PRNGKey(0))
+    calib = RNG.random((64, 62)).astype(np.float32)
+    return M.QuantizedMLP.from_float(params, calib), calib[:16]
+
+
+def test_quantized_mlp_traced_config_bit_identical():
+    qm, x = _toy_qmlp()
+    xq = qm.quantize_input(x)
+    for method in ("lut", "operand"):
+        for cfg in (0, 1, 8, 16, 31):
+            ref = qm.apply(xq, cfg, method)
+            out = qm.apply(xq, _t(cfg), method)
+            assert jnp.array_equal(out, ref), (method, cfg)
+
+
+def test_quantized_mlp_per_layer_configs():
+    qm, x = _toy_qmlp()
+    xq = qm.quantize_input(x)
+    mixed = qm.apply(xq, (1, 31), "operand")
+    assert not jnp.array_equal(mixed, qm.apply(xq, 0, "operand"))
+    # bit-exact layer-wise composition: hidden GEMM at cfg 1, output
+    # GEMM at cfg 31 (catches a swapped c1/c2 in _layer_configs)
+    from repro.core.quantization import QMAX
+    acc1 = approx_matmul_operand(jnp.asarray(xq), jnp.asarray(qm.w1), 1) \
+        + jnp.asarray(qm.b1)
+    h = jnp.clip(jnp.maximum(acc1, 0) >> qm.shift1, 0, QMAX
+                 ).astype(jnp.int8)
+    ref = approx_matmul_operand(h, jnp.asarray(qm.w2), 31) \
+        + jnp.asarray(qm.b2)
+    assert jnp.array_equal(mixed, ref)
+
+
+# --- model + engine level ---------------------------------------------------
+
+def _small_model():
+    from repro.nn import transformer as T
+    cfg = T.ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                        head_dim=16, d_ff=64, vocab_size=64,
+                        scan_layers=False, remat=False, q_chunk=8,
+                        loss_chunks=1, compute_dtype=jnp.float32)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return T, cfg, params
+
+
+def test_forward_traced_scalar_and_vector_agree():
+    T, cfg, params = _small_model()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    for c in (0, 8, 31):
+        h_scalar = T.forward(params, cfg, toks, approx_cfg=_t(c))
+        h_vec = T.forward(params, cfg, toks,
+                          approx_cfg=jnp.full((2,), c, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(h_scalar),
+                                      np.asarray(h_vec))
+
+
+def test_forward_no_retrace_over_configs():
+    T, cfg, params = _small_model()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    f = jax.jit(lambda p, t, a: T.forward(p, cfg, t, approx_cfg=a))
+    f(params, toks, jnp.zeros((2,), jnp.int32))
+    n0 = f._cache_size()
+    for c in range(N_CONFIGS):
+        f(params, toks, jnp.full((2,), c, jnp.int32))
+    assert f._cache_size() == n0 == 1
+
+
+def test_engine_32_config_sweep_zero_retraces():
+    """Acceptance: a scripted sweep over configs 0-31 through Engine
+    completes with zero retraces after warmup."""
+    from repro.serve.engine import Engine, Request
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, max_batch=2, max_len=32)
+    prompt = np.arange(8) % 64
+
+    def one_round(c):
+        eng.set_approx_cfg(c)
+        eng.submit(Request(rid=c, prompt=prompt, max_new_tokens=3))
+        done, eng.completed = eng.run(max_ticks=50), []
+        assert len(done) == 1 and len(done[0].tokens) == 3
+
+    one_round(0)   # warmup: compiles one prefill + one decode executable
+    sizes = (eng._decode._cache_size(), eng._prefill._cache_size())
+    for c in range(N_CONFIGS):
+        one_round(c)
+    assert (eng._decode._cache_size(), eng._prefill._cache_size()) == sizes
+
+    # per-request + per-layer allocation reuse the same executables too
+    eng.submit(Request(rid=100, prompt=prompt, max_new_tokens=3,
+                       approx_cfg=31))
+    eng.apply_allocation({"layer_0": 4, "layer_1": 27})
+    eng.submit(Request(rid=101, prompt=prompt, max_new_tokens=3))
+    done, eng.completed = eng.run(max_ticks=50), []
+    assert len(done) == 2
+    assert (eng._decode._cache_size(), eng._prefill._cache_size()) == sizes
+
+
+def test_forward_accepts_0d_numpy_config():
+    T, cfg, params = _small_model()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    h_np = T.forward(params, cfg, toks, approx_cfg=np.asarray(8))
+    h_int = T.forward(params, cfg, toks, approx_cfg=8)
+    np.testing.assert_array_equal(np.asarray(h_np), np.asarray(h_int))
+
+
+def test_engine_live_retune_reaches_inflight_unpinned_slots():
+    from repro.serve.engine import Engine, Request
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, max_batch=2, max_len=32)
+    eng.submit(Request(rid=0, prompt=np.arange(6) % 64, max_new_tokens=20))
+    eng.submit(Request(rid=1, prompt=np.arange(6) % 64, max_new_tokens=20,
+                       approx_cfg=8))         # pinned by its request
+    eng._admit()
+    eng.set_approx_cfg(31)                    # mid-generation retune
+    # unpinned slot follows the retune; the pinned one keeps its own 8
+    np.testing.assert_array_equal(eng._pool_cfg(), [8, 8])
+    eng.set_approx_cfg(2)
+    np.testing.assert_array_equal(eng._pool_cfg(), [2, 2])
+
+
+def test_engine_apply_allocation_rejects_bad_keys():
+    from repro.serve.engine import Engine
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, max_batch=1, max_len=32)
+    eng.apply_allocation({"layer_1": 8, 0: 4})       # both key forms work
+    np.testing.assert_array_equal(eng.approx_cfg, [4, 8])
+    for bad in ({"attn": 8}, {"layer_-1": 8}, {"layer_2": 8}, {5: 8}):
+        with pytest.raises(ValueError):
+            eng.apply_allocation(bad)
+
+
+def test_engine_pool_config_is_lowest_error_join():
+    from repro.serve.engine import Engine, Request, _mred_table
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, max_batch=2, max_len=32, approx_cfg=16)
+    # cfg 11 has a HIGHER index but LOWER measured error than cfg 9 —
+    # the join must rank by error, not by config index
+    assert _mred_table()[11] < _mred_table()[9]
+    eng.submit(Request(rid=0, prompt=np.arange(6) % 64, max_new_tokens=8,
+                       approx_cfg=jnp.asarray([9, 8])))
+    eng.submit(Request(rid=1, prompt=np.arange(9) % 64, max_new_tokens=8,
+                       approx_cfg=jnp.asarray([11, 31])))
+    eng._admit()
+    np.testing.assert_array_equal(eng._pool_cfg(), [11, 8])
+
+
+# --- controller backoff regression (PR 1 satellite) -------------------------
+
+def test_controller_backoff_steps_down_not_reset():
+    """Validation overshoot must cost one notch of saving on the worst
+    layer, not drop it to exact: total_saving stays higher at the same
+    budget than the reset-to-zero behavior."""
+    from repro.core.controller import DynamicPowerController
+    from repro.core.power_model import MAC_SAVING_FRAC
+
+    d = {c: float(MAC_SAVING_FRAC[c]) / 100.0 for c in (8, 16, 31)}
+    d[0] = 0.0
+    extra = 0.0035   # superadditive interaction the probes can't see
+
+    def loss_fn(assignment):
+        loss = sum(d[c] for c in assignment.values())
+        if sum(1 for c in assignment.values() if c > 0) >= 2:
+            loss += extra
+        return loss
+
+    budget = 0.009
+    ctrl = DynamicPowerController(["A", "B"], loss_fn,
+                                  probe_configs=(8, 16, 31))
+    assignment = ctrl.allocate(loss_budget=budget)
+    # end-to-end degradation fits the budget...
+    assert loss_fn(assignment) - ctrl.base_loss <= budget + 1e-12
+    # ...and no layer was reset to exact (the old behavior zeroed one)
+    assert assignment["A"] > 0 and assignment["B"] > 0, assignment
+    reset_variant = dict(assignment)
+    reset_variant["A"] = 0
+    assert ctrl.total_saving(assignment) > ctrl.total_saving(reset_variant)
