@@ -138,6 +138,98 @@ def bench_pallas_kernels_interpret():
     print(f"pallas_flash_attn_interpret_b1s128,{t:.1f},mode=interpret")
 
 
+def bench_pallas_path():
+    """The PR-2 tentpole quantified: the fused approx-MAC serving path.
+
+    Three A/Bs on one float-in/float-out approx dense —
+      * backend: XLA operand path vs the fused Pallas kernel;
+      * fusion: one pallas_call vs the PR-1 quantize->kernel->rescale
+        three-pass pipeline (two extra HBM round-trips);
+      * per-tile: a mixed per-N-block config vector on the same
+        executable (the per-neuron knob costs nothing extra);
+    plus the (bm, bn, bk) block-shape autotune sweep.  Emits CSV rows
+    AND machine-readable BENCH_pallas_path.json (the perf trajectory
+    artifact; uploaded by CI).  On CPU the kernel runs in interpret
+    mode — the numbers are correctness-path timings, the ranking is
+    only meaningful on TPU.
+    """
+    import json
+
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import time_call
+    from repro.core.quantization import quantize
+    from repro.kernels.approx_mac.ops import (approx_dense_pallas,
+                                              autotune_block_shapes,
+                                              default_interpret)
+    from repro.nn.layers import dense
+
+    interpret = default_interpret()
+    iters = 3 if interpret else 20
+    m, k, n = (256, 256, 256) if interpret else (1024, 1024, 1024)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    w_qt = quantize(w, axis=1)
+    cfg = jnp.asarray(8, jnp.int32)
+
+    f_xla = jax.jit(lambda x, c: dense(x, w_qt, approx_cfg=c,
+                                       compute_dtype=jnp.float32))
+    f_fused = jax.jit(lambda x, c: dense(x, w_qt, approx_cfg=c,
+                                         backend="pallas",
+                                         interpret=interpret,
+                                         compute_dtype=jnp.float32))
+    f_unfused = jax.jit(lambda x, c: approx_dense_pallas(
+        x, w_qt, config=c, fused=False, interpret=interpret,
+        compute_dtype=jnp.float32))
+    t_xla = time_call(f_xla, x, cfg, iters=iters)
+    t_fused = time_call(f_fused, x, cfg, iters=iters)
+    t_unfused = time_call(f_unfused, x, cfg, iters=iters)
+    # per-neuron knob: a mixed per-N-block config vector, same executable
+    cfg_vec = jnp.asarray([(31 * i) // max(n // 128 - 1, 1)
+                           for i in range(n // 128)], jnp.int32)
+    t_mixed = time_call(f_fused, x, cfg_vec, iters=iters)
+    tune = autotune_block_shapes(
+        m, k, n, config=8, interpret=interpret, iters=iters,
+        candidates=((128, 128, 128), (128, 128, 256), (256, 128, 256))
+        if interpret else None)
+    best = tune[0] if tune and "us" in tune[0] else None
+
+    mode = "interpret" if interpret else "tpu"
+    print(f"pallas_path_xla_{m}x{k}x{n},{t_xla:.1f},mode={mode}")
+    print(f"pallas_path_fused_{m}x{k}x{n},{t_fused:.1f},"
+          f"xla_vs_pallas={t_xla/t_fused:.2f}x")
+    print(f"pallas_path_unfused_{m}x{k}x{n},{t_unfused:.1f},"
+          f"fused_speedup={t_unfused/t_fused:.2f}x")
+    print(f"pallas_path_mixed_cfg_{m}x{k}x{n},{t_mixed:.1f},"
+          f"per_tile_overhead={t_mixed/t_fused:.2f}x")
+    if best:
+        print(f"pallas_path_autotune,{best['us']:.1f},"
+              f"best=bm{best['bm']}_bn{best['bn']}_bk{best['bk']}")
+
+    out = {
+        "bench": "pallas_path",
+        "mode": mode,
+        "shape": {"m": m, "k": k, "n": n},
+        "config": 8,
+        "xla_vs_pallas": {"xla_us": t_xla, "pallas_fused_us": t_fused,
+                          "speedup": t_xla / t_fused},
+        "fused_vs_unfused": {"fused_us": t_fused, "unfused_us": t_unfused,
+                             "speedup": t_unfused / t_fused},
+        "mixed_per_block_config": {"us": t_mixed,
+                                   "cfg_vec": cfg_vec.tolist()},
+        "autotune": tune,
+    }
+    with open("BENCH_pallas_path.json", "w") as f:
+        json.dump(out, f, indent=2)
+
+
+def bench_pallas():
+    """CI entry: interpret-mode kernel timings + the fused-path A/B."""
+    bench_pallas_kernels_interpret()
+    bench_pallas_path()
+
+
 def bench_lm_energy_model():
     """The paper's knob projected onto the assigned archs: modeled MAC
     energy per generated token, exact vs cfg31 (DESIGN.md §2)."""
@@ -220,7 +312,8 @@ BENCHES = {
     "fig7": bench_fig7_tradeoff,
     "hw_sim": bench_hw_sim,
     "approx_mac": bench_approx_mac_kernel,
-    "pallas": bench_pallas_kernels_interpret,
+    "pallas": bench_pallas,
+    "pallas_path": bench_pallas_path,
     "lm_energy": bench_lm_energy_model,
     "roofline": bench_roofline_table,
     "runtime_config": bench_runtime_config_switch,

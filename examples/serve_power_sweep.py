@@ -92,6 +92,36 @@ def main():
             eng._prefill._cache_size()) == caches_after_warmup
     print(f"per-layer allocation {eng.approx_cfg.tolist()} served "
           f"{len(done)} requests — still no recompiles")
+
+    # ---- the fused Pallas backend (PR 2) --------------------------------
+    # ModelConfig.mac_backend="pallas" routes every GEMM through the
+    # fused approx-MAC kernel (in-kernel activation quantization + f32
+    # rescale, per-N-block config vectors); the engine pre-quantizes the
+    # weights into QTensors ONCE at init.  cfg_groups=2 widens the knob
+    # to per-layer-per-neuron-group matrices.  Off-TPU the kernel runs
+    # in interpret mode (mac_interpret) — slow but bit-identical, so we
+    # demo on a short batch.  Pick block shapes for YOUR GEMMs with:
+    #   from repro.kernels.approx_mac.ops import autotune_block_shapes
+    #   best = autotune_block_shapes(m, k, n, config=8)[0]  # fastest-first
+    #   cfg = dataclasses.replace(cfg, mac_blocks=(best["bm"], best["bn"],
+    #                                              best["bk"]))
+    # (benchmarks/run.py pallas_path sweeps this into
+    #  BENCH_pallas_path.json.)
+    import dataclasses
+    cfg_p = dataclasses.replace(cfg, mac_backend="pallas",
+                                mac_interpret=True)
+    eng_p = Engine(params, cfg_p, max_batch=3, max_len=64, cfg_groups=2)
+    eng_p.rng = jax.random.PRNGKey(0)
+    # outer neuron group of every layer at cfg 31, inner exact
+    eng_p.set_approx_cfg(np.stack([np.zeros(4, np.int32),
+                                   np.full(4, 31, np.int32)], axis=1))
+    for i, p in enumerate(prompts[:3]):
+        eng_p.submit(Request(rid=300 + i, prompt=p, max_new_tokens=4))
+    done, eng_p.completed = eng_p.run(), []
+    rep = eng_p.energy_report()
+    print(f"\npallas backend (fused kernel, per-layer-per-block configs "
+          f"{eng_p.approx_cfg.tolist()}): {len(done)} requests, "
+          f"saving {rep['saving_frac']*100:.2f}%")
     print("\n(agreement = generated-token match vs the exact engine; "
           "energy = calibrated per-MAC model, DESIGN.md §2)")
 

@@ -29,11 +29,38 @@ from .approx_multiplier import (CONFIG_TABLE, N_CONFIGS,
 from .quantization import QTensor, truncate_operand_lsb
 
 # ---------------------------------------------------------------------------
-# LUT path (bit-faithful oracle)
+# device-resident constant tables
 # ---------------------------------------------------------------------------
+# jnp.asarray(<module numpy constant>) inside a traced function re-embeds
+# the table as a fresh HLO constant on every trace (and re-uploads it per
+# compile).  These lazy singletons upload each table to the default
+# device ONCE per process; every gather then references the same buffer.
 
+_OPERAND_TABLE_DEV: list = []
 _LUT_CACHE: dict[int, np.ndarray] = {}
 _LUT_STACK: list[np.ndarray] = []      # lazily built (32, 128, 128) stack
+_LUT_STACK_DEV: list = []
+
+
+def device_constant(cache: list, build):
+    """Lazy once-per-process device constant (cache is a module-level
+    list).  ensure_compile_time_eval guards the first call happening
+    inside a jit trace: the cached value must be a concrete device
+    array, never a tracer."""
+    if not cache:
+        with jax.ensure_compile_time_eval():
+            cache.append(jnp.asarray(build()))
+    return cache[0]
+
+
+def operand_param_table():
+    """(32, 4) int32 OPERAND_PARAM_TABLE as a device constant."""
+    return device_constant(_OPERAND_TABLE_DEV, lambda: OPERAND_PARAM_TABLE)
+
+
+# ---------------------------------------------------------------------------
+# LUT path (bit-faithful oracle)
+# ---------------------------------------------------------------------------
 
 
 def _lut(config: int) -> np.ndarray:
@@ -50,6 +77,10 @@ def _lut_stack() -> np.ndarray:
     return _LUT_STACK[0]
 
 
+def _lut_stack_dev():
+    return device_constant(_LUT_STACK_DEV, _lut_stack)
+
+
 def approx_matmul_lut(a_q, b_q, config):
     """Bit-exact approximate matmul on int8 values.
 
@@ -60,7 +91,7 @@ def approx_matmul_lut(a_q, b_q, config):
     runtime) or a Python int (single table baked into the trace).
     """
     if isinstance(config, jax.Array):
-        lut = jnp.asarray(_lut_stack())[jnp.asarray(config, jnp.int32)]
+        lut = _lut_stack_dev()[jnp.asarray(config, jnp.int32)]
     else:
         lut = jnp.asarray(_lut(config))
     a = a_q.astype(jnp.int32)
@@ -94,7 +125,7 @@ def gather_operand_params(config):
     replacement for the Python branch on a static config, so switching
     configs between calls retraces nothing.
     """
-    row = jnp.asarray(OPERAND_PARAM_TABLE)[jnp.asarray(config, jnp.int32)]
+    row = operand_param_table()[jnp.asarray(config, jnp.int32)]
     return row[..., 0], row[..., 1], row[..., 2], row[..., 3]
 
 
@@ -138,6 +169,52 @@ def quantized_matmul(a_q, b_q, preferred_element_type=jnp.int32):
 
 
 # ---------------------------------------------------------------------------
+# per-column-block (mixed-config) references
+# ---------------------------------------------------------------------------
+# The hardware's knob is per MAC unit, i.e. per *neuron* — one GEMM may
+# run different output columns at different error configs.  These are the
+# N-column-blocked reference semantics the Pallas kernel implements with
+# its per-tile scalar-prefetch config vector: output columns
+# [i*block_n, (i+1)*block_n) are computed entirely under cfg_vec[i]
+# (both operands truncated with that block's parameters).
+
+
+def _split_col_blocks(n: int, block_n: int) -> list[tuple[int, int]]:
+    assert block_n > 0
+    return [(s, min(s + block_n, n)) for s in range(0, n, block_n)]
+
+
+def approx_matmul_operand_blocked(a_q, b_q, cfg_vec, block_n: int,
+                                  preferred_element_type=jnp.int32):
+    """Mixed-config operand-truncation matmul (reference implementation).
+
+    cfg_vec: (ceil(N/block_n),) config indices — Python ints or a traced
+    int32 vector.  Block i's columns run under cfg_vec[i].  The Pallas
+    kernel computes this in ONE pallas_call; here each block is a
+    separate `approx_matmul_operand` call, concatenated — the oracle the
+    kernel is tested against.
+    """
+    n = b_q.shape[-1]
+    blocks = _split_col_blocks(n, block_n)
+    assert len(blocks) == (len(cfg_vec) if not isinstance(cfg_vec, jax.Array)
+                           else cfg_vec.shape[0]), (n, block_n)
+    outs = [approx_matmul_operand(a_q, b_q[..., s:e], cfg_vec[i],
+                                  preferred_element_type)
+            for i, (s, e) in enumerate(blocks)]
+    return jnp.concatenate(outs, axis=-1)
+
+
+def approx_matmul_lut_blocked(a_q, b_q, cfg_vec, block_n: int):
+    """Mixed-config bit-exact LUT matmul: the ASIC-model oracle for a
+    per-neuron-block configured GEMM (cfg_vec as in the operand twin)."""
+    n = b_q.shape[-1]
+    blocks = _split_col_blocks(n, block_n)
+    outs = [approx_matmul_lut(a_q, b_q[..., s:e], cfg_vec[i])
+            for i, (s, e) in enumerate(blocks)]
+    return jnp.concatenate(outs, axis=-1)
+
+
+# ---------------------------------------------------------------------------
 # Float-facing layer op
 # ---------------------------------------------------------------------------
 
@@ -160,5 +237,7 @@ def approx_dense(x, w_qt: QTensor, config: int, *, method: str = "operand"):
 N_APPROX_CONFIGS = N_CONFIGS
 __all__ = [
     "approx_matmul_lut", "approx_matmul_lut_np", "approx_matmul_operand",
-    "quantized_matmul", "approx_dense", "CONFIG_TABLE", "N_APPROX_CONFIGS",
+    "approx_matmul_operand_blocked", "approx_matmul_lut_blocked",
+    "quantized_matmul", "approx_dense", "operand_param_table",
+    "CONFIG_TABLE", "N_APPROX_CONFIGS",
 ]

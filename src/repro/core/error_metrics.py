@@ -46,6 +46,22 @@ def all_config_stats() -> list[ErrorStats]:
     return [multiplier_error_stats(c) for c in range(N_CONFIGS)]
 
 
+_MRED_TABLE: list[np.ndarray] = []
+
+
+def mred_table() -> np.ndarray:
+    """(32,) measured MRED per config, computed once per process — the
+    shared error ranking for conservative config joins (the engine's
+    decode-pool join and the kernel's neuron-group collapse; config
+    index is ordered by energy saving, in which error is non-monotone).
+    """
+    if not _MRED_TABLE:
+        _MRED_TABLE.append(np.asarray(
+            [multiplier_error_stats(c).mred for c in range(N_CONFIGS)],
+            np.float32))
+    return _MRED_TABLE[0]
+
+
 def summary_table() -> dict[str, float]:
     """min/max/avg over the 31 approximate configs (paper excludes config 0)."""
     stats = [multiplier_error_stats(c) for c in range(1, N_CONFIGS)]

@@ -39,6 +39,11 @@ class QTensor:
     def dequantize(self):
         scale = self.scale
         if self.axis is not None:
+            # guards against dequantizing a scan-STACKED container whose
+            # aux axis refers to the unstacked per-layer layout (see
+            # transformer._vmapped_quantize) — slice the layer out first
+            assert np.prod(scale.shape) == self.values.shape[self.axis], \
+                (scale.shape, self.values.shape, self.axis)
             shape = [1] * self.values.ndim
             shape[self.axis] = -1
             scale = jnp.reshape(scale, shape)
@@ -47,6 +52,23 @@ class QTensor:
     @property
     def magnitudes(self):
         return jnp.abs(self.values.astype(jnp.int32))
+
+    def reshape(self, *shape):
+        """Reshape `values`; valid only while the scale stays broadcastable
+        (per-tensor scale, or a reshape that keeps the scale axis as the
+        last dim — e.g. (d, h, hd) -> (d, h*hd) with an axis=-1 scale of
+        size h*hd is NOT expressible pre-reshape, so pre-quantized layer
+        weights are stored in their 2D GEMM layout instead)."""
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        vals = self.values.reshape(shape)
+        if self.axis is None:
+            return QTensor(vals, self.scale, None)
+        axis = self.axis % self.values.ndim
+        assert axis == self.values.ndim - 1 and \
+            vals.shape[-1] == self.values.shape[-1], \
+            "reshape must preserve the scale (channel) axis"
+        return QTensor(vals, self.scale, vals.ndim - 1)
 
     def tree_flatten(self):
         return (self.values, self.scale), (self.axis,)

@@ -8,16 +8,31 @@ is a handful of VPU integer ops per element on tiles already resident in
 VMEM — the approximation costs no extra HBM traffic.
 
 Runtime reconfigurability (the paper's actual contribution): the
-per-call (depth_a, depth_b, gate, rtn) parameters arrive as a (4,)
-int32 *scalar-prefetch* operand in SMEM, not as closure constants, so
-ONE compiled kernel serves all 32 error configurations — switching the
-power mode between calls retraces and recompiles nothing.
+per-call (depth_a, depth_b, gate, rtn) parameters arrive as a
+**per-N-column-block (n_blocks, 4)** int32 *scalar-prefetch* operand in
+SMEM indexed by ``program_id(1)``, not as closure constants.  Two
+consequences:
+
+  * ONE compiled kernel serves all 32 error configurations — switching
+    the power mode between calls retraces and recompiles nothing;
+  * different output-column blocks of ONE GEMM can run at different
+    error configs — the hardware's per-MAC (per-neuron) granularity,
+    still inside a single compiled executable (DESIGN.md §3).
+
+Two kernel variants share the truncation body:
+
+  * ``approx_mac_matmul``      — int8 x int8 -> int32 (quantized inputs)
+  * ``approx_mac_fused_matmul``— f32 x int8 -> f32: dynamic activation
+    quantization (divide by a prefetched abs-max scale, round, clip) and
+    the f32 rescale epilogue run INSIDE the kernel, so a float-in /
+    float-out approx dense is one pallas_call — no int8 activation or
+    int32 accumulator tensor ever round-trips through HBM.
 
 Tiling: grid (M/bm, N/bn, K/bk), A tile (bm, bk) and B tile (bk, bn) in
 VMEM, int32 accumulator scratch (bm, bn).  bm = bn = 128 and bk = 256
 keep the MXU dims 128-aligned and the working set
 (128*256 + 256*128 int8 + 128*128 int32) = 128 KiB well inside VMEM;
-ops.py lets benchmarks sweep block shapes.
+ops.py lets benchmarks sweep block shapes (``autotune_block_shapes``).
 
 The contraction (k) grid dimension is marked "arbitrary" so the
 accumulator carries across k-steps on TPU.
@@ -29,8 +44,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.approx_matmul import operand_param_table
 from repro.core.approx_multiplier import OPERAND_PARAM_TABLE
-from repro.core.quantization import truncate_operand_lsb
+from repro.core.quantization import QMAX, truncate_operand_lsb
 from repro.kernels.compat import CompilerParams as _CompilerParams
 
 
@@ -44,13 +60,21 @@ def _truncate(v, depth, gate, rtn):
     return truncate_operand_lsb(v, depth, gate, rtn).astype(jnp.int32)
 
 
+def _block_cfg(cfg_ref):
+    """This N-block's (depth_a, depth_b, gate, rtn) from the per-tile
+    (n_blocks, 4) SMEM config vector — the per-neuron knob."""
+    j = pl.program_id(1)
+    return cfg_ref[j, 0], cfg_ref[j, 1], cfg_ref[j, 2], cfg_ref[j, 3]
+
+
 def _kernel(cfg_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = _truncate(a_ref[...], cfg_ref[0], cfg_ref[2], cfg_ref[3])
-    b = _truncate(b_ref[...], cfg_ref[1], cfg_ref[2], cfg_ref[3])
+    depth_a, depth_b, gate, rtn = _block_cfg(cfg_ref)
+    a = _truncate(a_ref[...], depth_a, gate, rtn)
+    b = _truncate(b_ref[...], depth_b, gate, rtn)
     acc_ref[...] += jax.lax.dot_general(
         a, b, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
@@ -60,12 +84,99 @@ def _kernel(cfg_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps):
         o_ref[...] = acc_ref[...]
 
 
-def config_operand(config) -> jax.Array:
-    """(4,) int32 scalar-prefetch operand for a static or traced config."""
+def _fused_kernel(cfg_ref, xscale_ref, x_ref, b_ref, wscale_ref, o_ref,
+                  acc_ref, *, k_steps):
+    """Float-in/float-out variant: quantize the f32 activation tile with
+    the prefetched per-tensor scale, truncate, int8 MAC, and rescale to
+    f32 in the epilogue — all on VMEM-resident tiles.
+
+    The quantize/rescale arithmetic mirrors core.quantization.quantize
+    and core.approx_matmul.approx_dense op-for-op (same round/clip/cast
+    and the same f32 multiply order), so the fused path is bit-identical
+    to the unfused XLA operand path."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x_scale = xscale_ref[0]
+    depth_a, depth_b, gate, rtn = _block_cfg(cfg_ref)
+    x_q = jnp.clip(jnp.round(x_ref[...] / x_scale), -QMAX, QMAX
+                   ).astype(jnp.int8)
+    a = _truncate(x_q, depth_a, gate, rtn)
+    b = _truncate(b_ref[...], depth_b, gate, rtn)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) * x_scale
+                      * wscale_ref[...])
+
+
+def config_operand(config, n_blocks: int = 1) -> jax.Array:
+    """(n_blocks, 4) int32 scalar-prefetch operand.
+
+    `config` may be a Python int or a traced int32 scalar (one config
+    for every block), or an exactly-(n_blocks,) vector of config
+    indices (per-block configs).  Shorter "neuron group" vectors are a
+    wrapper-level concept: ops._expand_group_vector maps them onto the
+    block grid using the LOGICAL output width (with conservative
+    lowest-MRED collapse on straddling blocks) before the kernel call.
+    Rows are gathered from the device-resident OPERAND_PARAM_TABLE
+    (uploaded once per process, not re-embedded per trace).
+    """
+    if isinstance(config, (tuple, list)):
+        config = jnp.asarray(config, jnp.int32)
     if isinstance(config, jax.Array):
-        return jnp.asarray(OPERAND_PARAM_TABLE)[
-            jnp.asarray(config, jnp.int32)]
-    return jnp.asarray(OPERAND_PARAM_TABLE[int(config)])
+        cfg = jnp.asarray(config, jnp.int32)
+        if cfg.ndim == 0:
+            return jnp.broadcast_to(operand_param_table()[cfg],
+                                    (n_blocks, 4))
+        assert cfg.shape == (n_blocks,), (cfg.shape, n_blocks)
+        return operand_param_table()[cfg]
+    return jnp.broadcast_to(jnp.asarray(OPERAND_PARAM_TABLE[int(config)]),
+                            (n_blocks, 4))
+
+
+def _grid_call(kernel, n_prefetch, grid, in_specs, out_shape, scratch,
+               interpret):
+    """pallas_call through PrefetchScalarGridSpec when available, else
+    plain SMEM inputs (same kernel signature; loses only the prefetch
+    hint).  in_specs are the non-scalar specs with index maps taking
+    (i, j, ks) — prefetch args are appended automatically."""
+    common = dict(
+        out_shape=out_shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )
+    bspecs, ospec = in_specs
+
+    def with_prefetch(spec):
+        index_map = spec.index_map
+        return pl.BlockSpec(
+            spec.block_shape,
+            lambda i, j, ks, *_, _m=index_map: _m(i, j, ks))
+
+    if hasattr(pltpu, "PrefetchScalarGridSpec"):
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=n_prefetch,
+            grid=grid,
+            in_specs=[with_prefetch(s) for s in bspecs],
+            out_specs=with_prefetch(ospec),
+            scratch_shapes=scratch,
+        )
+        return pl.pallas_call(kernel, grid_spec=grid_spec, **common)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)] * n_prefetch
+        + list(bspecs),
+        out_specs=ospec,
+        scratch_shapes=scratch,
+        **common,
+    )
 
 
 def approx_mac_matmul(a, b, config=0, *, bm: int = 128,
@@ -73,9 +184,10 @@ def approx_mac_matmul(a, b, config=0, *, bm: int = 128,
                       interpret: bool = False):
     """a: (M, K) int8, b: (K, N) int8 -> (M, N) int32 under `config`.
 
-    `config` may be a Python int or a traced int32 scalar — either way
-    the compiled kernel is config-independent (params ride in SMEM).
-    Shapes must be pre-padded to tile multiples (ops.py handles padding).
+    `config` may be a Python int, a traced int32 scalar, or a per-block
+    config vector (see config_operand) — either way the compiled kernel
+    is config-independent (params ride in SMEM).  Shapes must be
+    pre-padded to tile multiples (ops.py handles padding).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -84,38 +196,51 @@ def approx_mac_matmul(a, b, config=0, *, bm: int = 128,
         (m, n, k, bm, bn, bk)
     k_steps = k // bk
     kernel = lambda *refs: _kernel(*refs, k_steps=k_steps)
-    common = dict(
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )
-    if hasattr(pltpu, "PrefetchScalarGridSpec"):
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(m // bm, n // bn, k_steps),
-            in_specs=[
-                pl.BlockSpec((bm, bk), lambda i, j, ks, cfg: (i, ks)),
-                pl.BlockSpec((bk, bn), lambda i, j, ks, cfg: (ks, j)),
-            ],
-            out_specs=pl.BlockSpec((bm, bn), lambda i, j, ks, cfg: (i, j)),
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        )
-        return pl.pallas_call(
-            kernel, grid_spec=grid_spec, **common,
-        )(config_operand(config), a, b)
-    # newer jax drops PrefetchScalarGridSpec along with TPUCompilerParams:
-    # pass the (4,) config as a plain SMEM-resident input instead (same
-    # kernel signature; loses only the prefetch hint)
-    return pl.pallas_call(
-        kernel,
-        grid=(m // bm, n // bn, k_steps),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
+    call = _grid_call(
+        kernel, 1, (m // bm, n // bn, k_steps),
+        ([
             pl.BlockSpec((bm, bk), lambda i, j, ks: (i, ks)),
             pl.BlockSpec((bk, bn), lambda i, j, ks: (ks, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ks: (i, j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        **common,
-    )(config_operand(config), a, b)
+        ], pl.BlockSpec((bm, bn), lambda i, j, ks: (i, j))),
+        jax.ShapeDtypeStruct((m, n), jnp.int32),
+        [pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret,
+    )
+    return call(config_operand(config, n // bn), a, b)
+
+
+def approx_mac_fused_matmul(x, w_q, w_scale_row, x_scale, config=0, *,
+                            bm: int = 128, bn: int = 128, bk: int = 256,
+                            interpret: bool = False):
+    """Fused float-in/float-out approx GEMM: ONE pallas_call.
+
+    x: (M, K) f32 activations (pre-padded); w_q: (K, N) int8;
+    w_scale_row: (1, N) f32 per-column weight scales (broadcast a
+    per-tensor scale before calling); x_scale: (1,) f32 per-tensor
+    activation scale (abs-max/127, computed by the caller's single
+    reduction pass); config: as in approx_mac_matmul.  Returns (M, N)
+    f32 = dequantized approximate product — the int8 activations and the
+    int32 accumulator exist only in VMEM.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2 and w_scale_row.shape == (1, n), \
+        (x.shape, w_q.shape, w_scale_row.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+    kernel = lambda *refs: _fused_kernel(*refs, k_steps=k_steps)
+    call = _grid_call(
+        kernel, 2, (m // bm, n // bn, k_steps),
+        ([
+            pl.BlockSpec((bm, bk), lambda i, j, ks: (i, ks)),
+            pl.BlockSpec((bk, bn), lambda i, j, ks: (ks, j)),
+            pl.BlockSpec((1, bn), lambda i, j, ks: (0, j)),
+        ], pl.BlockSpec((bm, bn), lambda i, j, ks: (i, j))),
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        [pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret,
+    )
+    return call(config_operand(config, n // bn),
+                jnp.asarray(x_scale, jnp.float32).reshape(1),
+                x.astype(jnp.float32), w_q, w_scale_row)

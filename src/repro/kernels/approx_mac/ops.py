@@ -1,19 +1,75 @@
-"""Jit-ready wrapper around the approx-MAC Pallas kernel.
+"""Jit-ready wrappers around the approx-MAC Pallas kernels.
 
 Handles padding to tile multiples, batching (leading dims flattened into
-M), dtype checks, and the interpret switch (CPU validation).  The f32
-scale handling (dynamic activation quantization) mirrors
-core.approx_matmul.approx_dense so models can switch `use_pallas` on
-without numeric drift.
+M), dtype checks, and the interpret switch (CPU validation).
+
+``approx_dense_pallas`` is the float-facing layer op on the kernel path.
+With ``fused=True`` (the default, the production path) the dynamic int8
+activation quantization and the f32 rescale epilogue run INSIDE the
+kernel (one pallas_call; the only extra HBM traffic beyond reading x/w
+and writing y is one abs-max reduction over x producing a scalar).  With
+``fused=False`` it reproduces the PR-1 three-pass pipeline (quantize ->
+kernel -> rescale, two extra HBM round-trips) — kept for the
+fused-vs-unfused A/B in benchmarks.
+
+Both accept per-N-column-block config vectors (the per-neuron knob); see
+``approx_mac.config_operand`` for the accepted config forms.
+``autotune_block_shapes`` sweeps (bm, bn, bk) candidates for a GEMM
+shape and returns the measured ranking (BENCH_pallas_path.json).
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from .approx_mac import approx_mac_matmul
+from repro.core.quantization import QMAX, QTensor, compute_scale
+
+from .approx_mac import approx_mac_fused_matmul, approx_mac_matmul
+
+
+def default_interpret() -> bool:
+    """True when the Pallas kernels must run in interpret mode (no TPU)."""
+    return jax.default_backend() != "tpu"
+
+
+_MRED_RANK_DEV: list = []
+
+
+def _mred_table_dev():
+    """core.error_metrics.mred_table as a device constant (one upload
+    per process) — the error ranking for conservative group collapse."""
+    from repro.core.approx_matmul import device_constant
+    from repro.core.error_metrics import mred_table
+    return device_constant(_MRED_RANK_DEV, mred_table)
+
+
+def _expand_group_vector(config, n_logical: int, bn: int, n_blocks: int):
+    """Map a (g,) neuron-group config vector onto the kernel's
+    (n_blocks,) N-block grid using the LOGICAL output width.
+
+    Neuron group j owns logical columns [j*n/g, (j+1)*n/g).  A kernel
+    block whose bn columns fall inside one group takes that group's
+    config; a block that straddles a group boundary — or a GEMM too
+    narrow to resolve all groups — runs the lowest-measured-MRED config
+    among the groups it covers (conservative collapse, the same
+    never-exceed-requested-error rule as the engine's pool join).
+    Static block spans + traced gathers: zero retraces across sweeps.
+    """
+    g = config.shape[0]
+    if g == n_blocks and n_logical % bn == 0:
+        # group spans == block spans exactly: per-block vector as-is
+        return config
+    rank = _mred_table_dev()
+    rows = []
+    for i in range(n_blocks):
+        lo = min(i * bn, n_logical - 1) * g // n_logical
+        hi = min((i + 1) * bn - 1, n_logical - 1) * g // n_logical
+        cand = config[lo:hi + 1]
+        rows.append(cand[jnp.argmin(rank[cand])])
+    return jnp.stack(rows)
 
 
 def _pad_to(x, mult, axis):
@@ -36,6 +92,8 @@ def _approx_mac_jit(a, b, config, *, bm, bn, bk, interpret):
     m_flat = a2.shape[0]
     a2 = _pad_to(_pad_to(a2, bm, 0), bk, 1)
     b2 = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    if config.ndim == 1:
+        config = _expand_group_vector(config, n, bn, b2.shape[1] // bn)
     out = approx_mac_matmul(a2, b2, config, bm=bm, bn=bn, bk=bk,
                             interpret=interpret)
     out = out[:m_flat, :n]
@@ -46,21 +104,125 @@ def approx_mac(a, b, config=0, *, bm: int = 128, bn: int = 128,
                bk: int = 256, interpret: bool = False):
     """a: (..., M, K) int8; b: (K, N) int8 -> (..., M, N) int32.
 
-    `config` is a TRACED int32 argument of the jitted wrapper (it was a
-    static argname before PR 1): sweeping all 32 error configs reuses one
-    compiled executable per shape — the runtime power knob.
+    `config` is a TRACED int32 argument of the jitted wrapper: sweeping
+    all 32 error configs — uniform scalars or per-block vectors of a
+    fixed length — reuses one compiled executable per shape.  A (g,)
+    vector assigns neuron group j to logical columns [j*N/g, (j+1)*N/g)
+    at bn-column block resolution; blocks straddling a group boundary
+    (or GEMMs too narrow to resolve all groups) collapse to the
+    lowest-measured-MRED config among their groups
+    (_expand_group_vector).
     """
     return _approx_mac_jit(a, b, jnp.asarray(config, jnp.int32),
                            bm=bm, bn=bn, bk=bk, interpret=interpret)
 
 
-def approx_dense_pallas(x, w_q, w_scale, config: int = 0, *,
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _approx_dense_fused_jit(x, w_q, w_scale, config, *, bm, bn, bk,
+                            interpret):
+    assert w_q.dtype == jnp.int8
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w_q.shape[-1]
+    x2 = x.astype(jnp.float32).reshape((-1, k))
+    m_flat = x2.shape[0]
+    # per-tensor dynamic activation scale: the ONE pre-pass the fused
+    # path keeps — a bandwidth-optimal reduction producing a scalar
+    x_scale = compute_scale(x2)
+    w_row = jnp.broadcast_to(
+        jnp.asarray(w_scale, jnp.float32).reshape(1, -1), (1, n))
+    x2 = _pad_to(_pad_to(x2, bm, 0), bk, 1)
+    w2 = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
+    w_row = _pad_to(w_row, bn, 1)
+    if config.ndim == 1:
+        config = _expand_group_vector(config, n, bn, w2.shape[1] // bn)
+    out = approx_mac_fused_matmul(x2, w2, w_row, x_scale, config,
+                                  bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m_flat, :n].reshape(lead + (n,))
+
+
+def approx_dense_pallas(x, w_q, w_scale=None, config=0, *,
+                        fused: bool = True,
+                        bm: int = 128, bn: int = 128, bk: int = 256,
                         interpret: bool = False,
                         compute_dtype=jnp.bfloat16):
-    """Float-facing layer op on the kernel path: dynamic per-tensor int8
-    activation quantization -> kernel -> f32 rescale."""
+    """Float-facing layer op on the kernel path.
+
+    x: (..., K) float activations; w_q: (K, N) int8 (or a QTensor, in
+    which case w_scale is taken from it); w_scale: f32 scalar or (N,)
+    per-channel vector.  Returns (..., N) `compute_dtype`, bit-identical
+    (interpret mode) to core.approx_matmul.approx_dense at every config,
+    including per-block config vectors.
+    """
+    if isinstance(w_q, QTensor):
+        assert w_scale is None
+        w_q, w_scale = w_q.values, w_q.scale
+    config = jnp.asarray(config, jnp.int32)
+    if fused:
+        y = _approx_dense_fused_jit(x, w_q, w_scale, config,
+                                    bm=bm, bn=bn, bk=bk,
+                                    interpret=interpret)
+        return y.astype(compute_dtype)
+    # unfused (PR-1) pipeline: quantize -> int kernel -> rescale, with
+    # the int8 activations and int32 accumulator round-tripping HBM
     from repro.core.quantization import quantize
     x_qt = quantize(x.astype(jnp.float32))
-    acc = approx_mac(x_qt.values, w_q, config, interpret=interpret)
+    acc = approx_mac(x_qt.values, w_q, config, bm=bm, bn=bn, bk=bk,
+                     interpret=interpret)
+    w_scale = jnp.asarray(w_scale, jnp.float32)
+    if w_scale.ndim == 1:
+        w_scale = w_scale[None, :]
     return (acc.astype(jnp.float32) * x_qt.scale * w_scale
             ).astype(compute_dtype)
+
+
+DEFAULT_BLOCK_CANDIDATES = (
+    (128, 128, 256),   # default: MXU-aligned, 128 KiB working set
+    (128, 128, 128),
+    (256, 128, 256),
+    (128, 256, 256),
+    (256, 256, 256),
+    (512, 128, 512),
+)
+
+
+def autotune_block_shapes(m: int, k: int, n: int, *, config=8,
+                          candidates=None, fused: bool = True,
+                          interpret: bool | None = None,
+                          iters: int = 5, seed: int = 0):
+    """Measure the fused approx-dense over (bm, bn, bk) candidates for a
+    GEMM shape; returns a list of {"bm","bn","bk","us"} dicts sorted
+    fastest-first (entry 0 is the pick).
+
+    On TPU this is the real autotune; in interpret mode (CPU CI) the
+    ranking is not meaningful for TPU but exercises the whole sweep
+    machinery and feeds BENCH_pallas_path.json.
+    """
+    import numpy as np
+    interpret = default_interpret() if interpret is None else interpret
+    candidates = list(candidates or DEFAULT_BLOCK_CANDIDATES)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w_q = jnp.asarray(rng.integers(-QMAX, QMAX + 1, (k, n)), jnp.int8)
+    w_scale = jnp.asarray(rng.random(n) * 0.02 + 1e-3, jnp.float32)
+    results = []
+    for bm, bn, bk in candidates:
+        def run():
+            return approx_dense_pallas(x, w_q, w_scale, config,
+                                       fused=fused, bm=bm, bn=bn, bk=bk,
+                                       interpret=interpret)
+        try:
+            jax.block_until_ready(run())                    # compile
+            times = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run())
+                times.append(time.perf_counter() - t0)
+            results.append({"bm": bm, "bn": bn, "bk": bk,
+                            "us": float(np.median(times) * 1e6)})
+        except Exception as e:   # a candidate may exceed VMEM on TPU
+            results.append({"bm": bm, "bn": bn, "bk": bk,
+                            "error": f"{type(e).__name__}: {e}"})
+    ok = [r for r in results if "us" in r]
+    ok.sort(key=lambda r: r["us"])
+    return ok + [r for r in results if "us" not in r]

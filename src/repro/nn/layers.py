@@ -43,20 +43,48 @@ def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 
 def dense(x, w, *, approx_cfg: int = 0, quantized: bool = False,
-          compute_dtype=jnp.bfloat16):
+          compute_dtype=jnp.bfloat16, backend: str = "xla",
+          interpret: bool = False,
+          block_shapes: tuple[int, int, int] = (128, 128, 256)):
     """y = x @ w under the selected arithmetic mode.
 
-    w may be a float array or a QTensor (pre-quantized weights).  When
-    `quantized` or approx_cfg>0, runs the integer pipeline: dynamic
+    w may be a float array or a QTensor (pre-quantized weights — see
+    transformer.quantize_lm_params; quantizing once at load time instead
+    of inside every traced call removes a per-decode-step requantize).
+    When `quantized` or approx_cfg>0, runs the integer pipeline: dynamic
     per-tensor int8 activations x int8 weights, operand-truncation
     approximation, f32 rescale (DESIGN.md §2).
 
     `approx_cfg` may be a TRACED int32 scalar (the runtime power knob):
     the integer pipeline then always runs, with the error config gathered
     per call — traced config 0 is the exact int8 MAC (the paper's exact
-    mode), bit-identical to the static quantized path."""
+    mode), bit-identical to the static quantized path.  On the "pallas"
+    backend it may also be a (g,) per-neuron-group config VECTOR: group
+    j covers output columns [j*N/g, (j+1)*N/g) at the kernel's
+    bn-column block resolution; blocks straddling a group boundary (or
+    GEMMs narrower than g blocks) run the lowest-measured-MRED config
+    among their groups — never higher error than any covered neuron
+    asked for (DESIGN.md §3).
+
+    backend: "xla" (operand-truncation ops compiled by XLA) or "pallas"
+    (the fused approx-MAC kernel: quantize + truncate + int8 MAC +
+    rescale in one pallas_call).  Both are bit-identical per config;
+    `interpret` runs the kernel in interpret mode (CPU tests);
+    `block_shapes` is the kernel's (bm, bn, bk) tiling — results are
+    tiling-invariant, so feed it an autotune_block_shapes winner."""
+    vector_cfg = isinstance(approx_cfg, jax.Array) and approx_cfg.ndim >= 1
     if isinstance(approx_cfg, jax.Array) or approx_cfg > 0 or quantized:
         w_qt = w if isinstance(w, QTensor) else quantize(w, axis=1)
+        if backend == "pallas":
+            from repro.kernels.approx_mac.ops import approx_dense_pallas
+            bm, bn, bk = block_shapes
+            y = approx_dense_pallas(x.astype(jnp.float32), w_qt,
+                                    config=approx_cfg, interpret=interpret,
+                                    bm=bm, bn=bn, bk=bk,
+                                    compute_dtype=jnp.float32)
+            return y.astype(compute_dtype)
+        assert not vector_cfg, \
+            "per-block config vectors require backend='pallas'"
         y = approx_dense(x.astype(jnp.float32), w_qt, approx_cfg)
         return y.astype(compute_dtype)
     if isinstance(w, QTensor):

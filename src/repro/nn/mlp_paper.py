@@ -122,13 +122,25 @@ class QuantizedMLP:
             return config[0], config[1]
         return config, config
 
-    def apply(self, x_q, config=0, method: str = "lut"):
+    def apply(self, x_q, config=0, method: str = "lut",
+              interpret: bool | None = None):
         """Integer forward pass under error config `config` (jax arrays).
 
         x_q: (B, 62) int8.  Returns (B, 10) int32 logits (accumulator
         domain of the output layer — argmax semantics identical to the
-        hardware's maximum-value circuit)."""
-        mm = approx_matmul_lut if method == "lut" else approx_matmul_operand
+        hardware's maximum-value circuit).  method: "lut" (bit-exact
+        ASIC oracle), "operand" (TPU-native XLA adaptation), or
+        "pallas" (the approx-MAC kernel — same operand semantics, run
+        through the fused serving kernel; `interpret` defaults to auto:
+        interpret mode off-TPU)."""
+        if method == "pallas":
+            from repro.kernels.approx_mac.ops import (approx_mac,
+                                                      default_interpret)
+            itp = default_interpret() if interpret is None else interpret
+            mm = lambda a, b, c: approx_mac(a, b, c, interpret=itp)
+        else:
+            mm = (approx_matmul_lut if method == "lut"
+                  else approx_matmul_operand)
         c1, c2 = self._layer_configs(config)
         x_q = jnp.asarray(x_q)
         acc1 = mm(x_q, jnp.asarray(self.w1), c1) + jnp.asarray(self.b1)

@@ -115,11 +115,13 @@ def causal_conv1d_step(x_t, conv_state, w, b):
 
 
 def recurrent_block(params, x, *, approx_cfg: int = 0, state=None,
-                    decode: bool = False):
+                    decode: bool = False, dense_kw: dict | None = None):
     """Griffin recurrent block: gate branch * (conv -> RG-LRU) branch.
     state (decode): {"h": (B,W), "conv": (B,K-1,W)}."""
-    gate = jax.nn.gelu(dense(x, params["w_in_gate"], approx_cfg=approx_cfg))
-    rec = dense(x, params["w_in_rec"], approx_cfg=approx_cfg)
+    kw = dense_kw or {}
+    gate = jax.nn.gelu(dense(x, params["w_in_gate"], approx_cfg=approx_cfg,
+                             **kw))
+    rec = dense(x, params["w_in_rec"], approx_cfg=approx_cfg, **kw)
     if decode:
         x_t = rec[:, 0]
         c_out, conv_state = causal_conv1d_step(
@@ -136,7 +138,7 @@ def recurrent_block(params, x, *, approx_cfg: int = 0, state=None,
         new_state = {"h": h_last,
                      "conv": rec.astype(jnp.float32)[:, -(k - 1):, :]}
     out = dense((y * gate).astype(x.dtype), params["w_out"],
-                approx_cfg=approx_cfg)
+                approx_cfg=approx_cfg, **kw)
     return out, new_state
 
 
@@ -163,17 +165,22 @@ def mlstm_block_init(rng, d_model: int, n_heads: int, proj_factor: float = 2.0):
 
 
 def mlstm_parallel(params, x, n_heads: int, *, approx_cfg: int = 0,
-                   q_chunk: int = 1024, unroll: bool = False):
+                   q_chunk: int = 1024, unroll: bool = False,
+                   dense_kw: dict | None = None):
     """x: (B,S,D) -> (B,S,D) via the stabilized parallel form."""
+    kw = dense_kw or {}
     nh = n_heads
     b, s, _ = x.shape
-    up = dense(x, params["w_up"], approx_cfg=approx_cfg)
-    gate = jax.nn.silu(dense(x, params["w_gate"], approx_cfg=approx_cfg))
+    up = dense(x, params["w_up"], approx_cfg=approx_cfg, **kw)
+    gate = jax.nn.silu(dense(x, params["w_gate"], approx_cfg=approx_cfg, **kw))
     d_inner = up.shape[-1]
     hd = d_inner // nh
-    q = dense(up, params["w_q"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
-    k = dense(up, params["w_k"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
-    v = dense(up, params["w_v"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
+    q = dense(up, params["w_q"], approx_cfg=approx_cfg,
+              **kw).reshape(b, s, nh, hd)
+    k = dense(up, params["w_k"], approx_cfg=approx_cfg,
+              **kw).reshape(b, s, nh, hd)
+    v = dense(up, params["w_v"], approx_cfg=approx_cfg,
+              **kw).reshape(b, s, nh, hd)
     if_gates = (up.astype(jnp.float32) @ params["w_if"] + params["b_if"])
     log_i = if_gates[..., :nh]                               # pre-activation
     log_f = jax.nn.log_sigmoid(if_gates[..., nh:])           # (B,S,H)
@@ -185,11 +192,12 @@ def mlstm_parallel(params, x, n_heads: int, *, approx_cfg: int = 0,
     from .layers import rmsnorm
     h = rmsnorm(h, params["ln_scale"] - 1.0)                 # scale offset=1
     out = dense((h * gate).astype(x.dtype), params["w_down"],
-                approx_cfg=approx_cfg)
+                approx_cfg=approx_cfg, **kw)
     return out
 
 
-def mlstm_final_state(params, x, n_heads: int, *, approx_cfg: int = 0):
+def mlstm_final_state(params, x, n_heads: int, *, approx_cfg: int = 0,
+                      dense_kw: dict | None = None):
     """Materialize the recurrent state (C,n,m) after consuming x —
     needed to continue decoding after a parallel-form prefill.
 
@@ -197,13 +205,16 @@ def mlstm_final_state(params, x, n_heads: int, *, approx_cfg: int = 0):
     w_j = sum_{l=j+1..S} log_f_l + log_i_j, and
     C_S = sum_j exp(w_j - m_S) k_j v_j^T,  n_S = sum_j exp(w_j - m_S) k_j.
     """
+    kw = dense_kw or {}
     nh = n_heads
     b, s, _ = x.shape
-    up = dense(x, params["w_up"], approx_cfg=approx_cfg)
+    up = dense(x, params["w_up"], approx_cfg=approx_cfg, **kw)
     d_inner = up.shape[-1]
     hd = d_inner // nh
-    k = dense(up, params["w_k"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
-    v = dense(up, params["w_v"], approx_cfg=approx_cfg).reshape(b, s, nh, hd)
+    k = dense(up, params["w_k"], approx_cfg=approx_cfg,
+              **kw).reshape(b, s, nh, hd)
+    v = dense(up, params["w_v"], approx_cfg=approx_cfg,
+              **kw).reshape(b, s, nh, hd)
     if_g = (up.astype(jnp.float32) @ params["w_if"] + params["b_if"])
     log_i = if_g[..., :nh]
     log_f = jax.nn.log_sigmoid(if_g[..., nh:])               # (B,S,H)
@@ -218,18 +229,24 @@ def mlstm_final_state(params, x, n_heads: int, *, approx_cfg: int = 0):
     return {"C": c_state, "n": n_state, "m": m}
 
 
-def mlstm_step(params, x_t, state, n_heads: int, *, approx_cfg: int = 0):
+def mlstm_step(params, x_t, state, n_heads: int, *, approx_cfg: int = 0,
+               dense_kw: dict | None = None):
     """Decode step with matrix memory state {"C": (B,H,hd,hd),
     "n": (B,H,hd), "m": (B,H)}.  x_t: (B,1,D)."""
+    kw = dense_kw or {}
     nh = n_heads
     b = x_t.shape[0]
-    up = dense(x_t[:, 0], params["w_up"], approx_cfg=approx_cfg)
-    gate = jax.nn.silu(dense(x_t[:, 0], params["w_gate"], approx_cfg=approx_cfg))
+    up = dense(x_t[:, 0], params["w_up"], approx_cfg=approx_cfg, **kw)
+    gate = jax.nn.silu(dense(x_t[:, 0], params["w_gate"], approx_cfg=approx_cfg,
+                             **kw))
     d_inner = up.shape[-1]
     hd = d_inner // nh
-    q = dense(up, params["w_q"], approx_cfg=approx_cfg).reshape(b, nh, hd)
-    k = dense(up, params["w_k"], approx_cfg=approx_cfg).reshape(b, nh, hd)
-    v = dense(up, params["w_v"], approx_cfg=approx_cfg).reshape(b, nh, hd)
+    q = dense(up, params["w_q"], approx_cfg=approx_cfg,
+              **kw).reshape(b, nh, hd)
+    k = dense(up, params["w_k"], approx_cfg=approx_cfg,
+              **kw).reshape(b, nh, hd)
+    v = dense(up, params["w_v"], approx_cfg=approx_cfg,
+              **kw).reshape(b, nh, hd)
     if_g = (up.astype(jnp.float32) @ params["w_if"] + params["b_if"])
     log_i = if_g[..., :nh]
     log_f = jax.nn.log_sigmoid(if_g[..., nh:])               # (B,H)
@@ -248,7 +265,7 @@ def mlstm_step(params, x_t, state, n_heads: int, *, approx_cfg: int = 0):
     from .layers import rmsnorm
     h = rmsnorm(h, params["ln_scale"] - 1.0)
     out = dense((h * gate).astype(x_t.dtype), params["w_down"],
-                approx_cfg=approx_cfg)
+                approx_cfg=approx_cfg, **kw)
     return out[:, None, :], {"C": c_new, "n": n_new, "m": m_new}
 
 
@@ -301,10 +318,11 @@ def _slstm_cell(params, wx_t, carry, n_heads: int):
 
 
 def slstm_scan(params, x, n_heads: int, *, approx_cfg: int = 0,
-               state=None):
+               state=None, dense_kw: dict | None = None):
     """x: (B,S,D) -> (B,S,D); sequential lax.scan over time."""
+    kw = dense_kw or {}
     b, s, d = x.shape
-    wx = dense(x, params["w"], approx_cfg=approx_cfg).astype(jnp.float32)
+    wx = dense(x, params["w"], approx_cfg=approx_cfg, **kw).astype(jnp.float32)
     # reorder to (i,f,z,o) blocks of size D each — init is already blocked
     if state is None:
         zeros = jnp.zeros((b, d), jnp.float32)
@@ -320,15 +338,16 @@ def slstm_scan(params, x, n_heads: int, *, approx_cfg: int = 0,
     h = hs.transpose(1, 0, 2)                                # (B,S,D)
     from .layers import rmsnorm
     h = rmsnorm(h.astype(x.dtype), params["ln_scale"] - 1.0)
-    up = jax.nn.silu(dense(h, params["w_gate"], approx_cfg=approx_cfg)) \
-        * dense(h, params["w_up"], approx_cfg=approx_cfg)
-    out = dense(up, params["w_down"], approx_cfg=approx_cfg)
+    up = jax.nn.silu(dense(h, params["w_gate"], approx_cfg=approx_cfg, **kw)) \
+        * dense(h, params["w_up"], approx_cfg=approx_cfg, **kw)
+    out = dense(up, params["w_down"], approx_cfg=approx_cfg, **kw)
     new_state = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
     return out, new_state
 
 
-def slstm_step(params, x_t, state, n_heads: int, *, approx_cfg: int = 0):
+def slstm_step(params, x_t, state, n_heads: int, *, approx_cfg: int = 0,
+               dense_kw: dict | None = None):
     """Decode step; x_t: (B,1,D)."""
     out, new_state = slstm_scan(params, x_t, n_heads, approx_cfg=approx_cfg,
-                                state=state)
+                                state=state, dense_kw=dense_kw)
     return out, new_state

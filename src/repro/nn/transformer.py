@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantization import quantize
+from repro.core.quantization import QTensor, quantize
 from .attention import chunked_attention, decode_attention
 from .layers import ACT, dense, dense_init, embed_init, layernorm, rmsnorm, softcap
 from .moe import moe_ffn
@@ -91,6 +91,16 @@ class ModelConfig:
     # recurrent
     lru_width: int = 0
     mlstm_proj_factor: float = 2.0
+    # approx-MAC execution backend for every dense GEMM (DESIGN.md §3):
+    # "xla" = operand-truncation ops compiled by XLA; "pallas" = the
+    # fused approx-MAC kernel (quantize + truncate + int8 MAC + rescale
+    # in one pallas_call, per-N-block config vectors supported).
+    # mac_interpret runs the kernel in interpret mode (CPU tests/CI).
+    # mac_blocks = the kernel's (bm, bn, bk) tile shape — feed it the
+    # winner of kernels.approx_mac.ops.autotune_block_shapes on TPU.
+    mac_backend: str = "xla"
+    mac_interpret: bool = False
+    mac_blocks: tuple[int, int, int] = (128, 128, 256)
     # runtime/execution
     scan_layers: bool = True
     remat: bool = True
@@ -345,23 +355,124 @@ def init_lm(rng, cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# one-time weight quantization (serving)
+# ---------------------------------------------------------------------------
+
+def _vmapped_quantize(a, base_ndim: int):
+    """Per-channel quantize of the trailing `base_ndim` dims, vmapped
+    over any leading (scan-stacked layer) dims.
+
+    CONTRACT: for stacked inputs the result is a *container* QTensor —
+    values (L, ..., C) with scale (L, C) — whose aux `axis` refers to
+    the UNSTACKED per-layer layout (axis = base_ndim - 1), because the
+    only consumers are lax.scan / per-layer slicing, which reduce each
+    leaf back to the per-layer shape where the axis is correct.
+    Dequantizing the stacked container directly is guarded against in
+    QTensor.dequantize (slice a layer out first)."""
+    f = lambda w: quantize(w, axis=w.ndim - 1)
+    for _ in range(a.ndim - base_ndim):
+        f = jax.vmap(f)
+    return f(a)
+
+
+def quantize_lm_params(params, cfg: ModelConfig):
+    """Pre-quantize every GEMM weight that flows through ``dense`` into
+    a QTensor ONCE — the serving engine calls this at init so no decode
+    step re-runs weight abs-max/round/cast inside the traced graph
+    (previously every dense call re-quantized its float weight).
+
+    Attention projections are stored in their 2D GEMM layout
+    ((d, H*hd) / (H*hd, d)) with per-output-channel scales — exactly the
+    arrays the per-call ``quantize(w, axis=1)`` produced, so numerics are
+    unchanged.  Dense-MLP mats quantize per-channel in place.  MoE expert
+    tensors and recurrent cells keep per-call quantization (their
+    pipelines quantize activations and weights jointly).  Returns a new
+    params tree; embed/lm_head/norms stay float.
+    """
+    def conv_attn(d):
+        out = dict(d)
+        for key in ("wq", "wk", "wv"):
+            if key in d:
+                a = d[key]
+                lead = a.ndim - 3
+                a2 = a.reshape(a.shape[:lead + 1] + (-1,))
+                out[key] = _vmapped_quantize(a2, 2)
+        if "wo" in d:
+            a = d["wo"]
+            lead = a.ndim - 3
+            a2 = a.reshape(a.shape[:lead] + (-1, a.shape[-1]))
+            out["wo"] = _vmapped_quantize(a2, 2)
+        return out
+
+    def conv_mlp(d):
+        if cfg.n_experts > 0 or not d:
+            return d
+        out = dict(d)
+        for key in ("w_up", "w_gate", "w_down"):
+            if key in d:
+                out[key] = _vmapped_quantize(d[key], 2)
+        return out
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            if k in ("attn", "xattn"):
+                out[k] = conv_attn(v)
+            elif k == "mlp":
+                out[k] = conv_mlp(v)
+            else:
+                out[k] = walk(v)
+        return out
+
+    new = dict(params)
+    for key in ("blocks", "encoder"):
+        if key in params:
+            new[key] = walk(params[key])
+    return new
+
+
+# ---------------------------------------------------------------------------
 # forward blocks
 # ---------------------------------------------------------------------------
 
-def _proj(x, w, approx_cfg=0, bias=None):
-    """x: (B,S,d) @ w: (d,H,hd) -> (B,S,H,hd) through the dense knob."""
-    d, h, hd = w.shape
-    y = dense(x, w.reshape(d, h * hd), approx_cfg=approx_cfg)
+def _dense_kw(cfg) -> dict:
+    """dense() kwargs for the model's MAC backend (empty = XLA default)."""
+    if cfg is None or cfg.mac_backend == "xla":
+        return {}
+    return {"backend": cfg.mac_backend, "interpret": cfg.mac_interpret,
+            "block_shapes": tuple(cfg.mac_blocks)}
+
+
+def _proj(x, w, approx_cfg=0, bias=None, cfg=None, heads=None):
+    """x: (B,S,d) @ w: (d,H,hd) -> (B,S,H,hd) through the dense knob.
+
+    w is a float (d,H,hd) array, or a pre-quantized QTensor stored in
+    its 2D GEMM layout (d, H*hd) (quantize_lm_params) — then `heads`
+    supplies H for the output reshape."""
+    if isinstance(w, QTensor):
+        assert heads is not None, "QTensor projections need heads="
+        h, hd = heads, w.values.shape[-1] // heads
+        y = dense(x, w, approx_cfg=approx_cfg, **_dense_kw(cfg))
+    else:
+        d, h, hd = w.shape
+        y = dense(x, w.reshape(d, h * hd), approx_cfg=approx_cfg,
+                  **_dense_kw(cfg))
     y = y.reshape(x.shape[:-1] + (h, hd))
     if bias is not None:
         y = y + bias.astype(y.dtype)
     return y
 
 
-def _attn_out(y, wo, approx_cfg=0):
+def _attn_out(y, wo, approx_cfg=0, cfg=None):
+    if isinstance(wo, QTensor):
+        hhd = wo.values.shape[0]
+        return dense(y.reshape(y.shape[:-2] + (hhd,)), wo,
+                     approx_cfg=approx_cfg, **_dense_kw(cfg))
     h, hd, d = wo.shape
     return dense(y.reshape(y.shape[:-2] + (h * hd,)), wo.reshape(h * hd, d),
-                 approx_cfg=approx_cfg)
+                 approx_cfg=approx_cfg, **_dense_kw(cfg))
 
 
 def _mlp_apply(p, x, cfg, approx_cfg=0):
@@ -376,18 +487,20 @@ def _mlp_apply(p, x, cfg, approx_cfg=0):
                        n_groups=groups, act=cfg.act,
                        renormalize=cfg.renormalize, approx_cfg=approx_cfg,
                        seq_chunks=cfg.moe_seq_chunks if s > 1 else 1,
-                       unroll_chunks=cfg.unroll_chunks, ep=cfg.moe_ep)
+                       unroll_chunks=cfg.unroll_chunks, ep=cfg.moe_ep,
+                       backend=cfg.mac_backend, interpret=cfg.mac_interpret)
         return y.reshape(b, s, d)
     if not p:
         return x
+    kw = _dense_kw(cfg)
     act = ACT["gelu" if cfg.mlp == "geglu" else cfg.act] \
         if cfg.mlp in ("swiglu", "geglu") else ACT[cfg.act]
     if "w_gate" in p:
-        h = act(dense(x, p["w_gate"], approx_cfg=approx_cfg)) \
-            * dense(x, p["w_up"], approx_cfg=approx_cfg)
+        h = act(dense(x, p["w_gate"], approx_cfg=approx_cfg, **kw)) \
+            * dense(x, p["w_up"], approx_cfg=approx_cfg, **kw)
     else:
-        h = act(dense(x, p["w_up"], approx_cfg=approx_cfg))
-    return dense(h, p["w_down"], approx_cfg=approx_cfg)
+        h = act(dense(x, p["w_up"], approx_cfg=approx_cfg, **kw))
+    return dense(h, p["w_down"], approx_cfg=approx_cfg, **kw)
 
 
 def _attention_block(p, x, cfg, kind, *, positions, approx_cfg=0,
@@ -395,9 +508,12 @@ def _attention_block(p, x, cfg, kind, *, positions, approx_cfg=0,
     from .layers import apply_rope
     res = x
     h = _apply_norm(p["norm1"], x, cfg)
-    q = _proj(h, p["attn"]["wq"], approx_cfg, p["attn"].get("bq"))
-    k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"))
-    v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"))
+    q = _proj(h, p["attn"]["wq"], approx_cfg, p["attn"].get("bq"), cfg,
+              cfg.n_heads)
+    k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"), cfg,
+              cfg.n_kv_heads)
+    v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"), cfg,
+              cfg.n_kv_heads)
     if cfg.norm == "rms":                      # rope archs
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
@@ -406,20 +522,23 @@ def _attention_block(p, x, cfg, kind, *, positions, approx_cfg=0,
                              logit_cap=cfg.attn_softcap,
                              scale=cfg.query_scale, q_chunk=cfg.q_chunk,
                              unroll=cfg.unroll_chunks)
-    y = _attn_out(attn, p["attn"]["wo"], approx_cfg)
+    y = _attn_out(attn, p["attn"]["wo"], approx_cfg, cfg)
     if cfg.post_norm:
         y = _apply_norm(p["post1"], y, cfg)
     x = res + y
     if enc_out is not None and "xattn" in p:
         res = x
         h = _apply_norm(p["norm_x"], x, cfg)
-        q = _proj(h, p["xattn"]["wq"], approx_cfg)
-        k = _proj(enc_out, p["xattn"]["wk"], approx_cfg)
-        v = _proj(enc_out, p["xattn"]["wv"], approx_cfg)
+        q = _proj(h, p["xattn"]["wq"], approx_cfg, cfg=cfg,
+                  heads=cfg.n_heads)
+        k = _proj(enc_out, p["xattn"]["wk"], approx_cfg, cfg=cfg,
+                  heads=cfg.n_kv_heads)
+        v = _proj(enc_out, p["xattn"]["wv"], approx_cfg, cfg=cfg,
+                  heads=cfg.n_kv_heads)
         attn = chunked_attention(q, k, v, causal=False,
                                  q_chunk=cfg.q_chunk,
                                  unroll=cfg.unroll_chunks)
-        x = res + _attn_out(attn, p["xattn"]["wo"], approx_cfg)
+        x = res + _attn_out(attn, p["xattn"]["wo"], approx_cfg, cfg)
     res = x
     h = _apply_norm(p["norm2"], x, cfg)
     y = _mlp_apply(p["mlp"], h, cfg, approx_cfg)
@@ -437,7 +556,8 @@ def _apply_block(p, kind, x, cfg, *, positions, approx_cfg=0, causal=True,
     if kind == "recurrent":
         res = x
         h = _apply_norm(p["norm1"], x, cfg)
-        y, _ = recurrent_block(p["rec"], h, approx_cfg=approx_cfg)
+        y, _ = recurrent_block(p["rec"], h, approx_cfg=approx_cfg,
+                               dense_kw=_dense_kw(cfg))
         x = res + y
         res = x
         h = _apply_norm(p["norm2"], x, cfg)
@@ -448,27 +568,32 @@ def _apply_block(p, kind, x, cfg, *, positions, approx_cfg=0, causal=True,
         return res + mlstm_parallel(p["cell"], h, cfg.n_heads,
                                     approx_cfg=approx_cfg,
                                     q_chunk=cfg.q_chunk,
-                                    unroll=cfg.unroll_chunks)
+                                    unroll=cfg.unroll_chunks,
+                                    dense_kw=_dense_kw(cfg))
     if kind == "slstm":
         res = x
         h = _apply_norm(p["norm1"], x, cfg)
-        y, _ = slstm_scan(p["cell"], h, cfg.n_heads, approx_cfg=approx_cfg)
+        y, _ = slstm_scan(p["cell"], h, cfg.n_heads, approx_cfg=approx_cfg,
+                          dense_kw=_dense_kw(cfg))
         return res + y
     raise ValueError(kind)
 
 
 def is_per_layer_cfg(approx_cfg) -> bool:
-    """True when approx_cfg is a (n_layers,) per-layer config vector
-    (0-d arrays are uniform scalar configs, not vectors)."""
+    """True when approx_cfg is a (n_layers,) per-layer config vector or
+    a (n_layers, n_groups) per-layer-per-N-block config matrix (0-d
+    arrays are uniform scalar configs, not vectors)."""
     if isinstance(approx_cfg, (jax.Array, np.ndarray)):
-        return approx_cfg.ndim == 1
+        return approx_cfg.ndim in (1, 2)
     return isinstance(approx_cfg, (list, tuple))
 
 
 def split_layer_cfgs(approx_cfg, n_scan: int, npat: int):
-    """(scan_part (n_groups, npat), rest_part) of a per-layer vector."""
+    """(scan_part (n_groups, npat, ...), rest_part) of a per-layer
+    vector/matrix; trailing per-N-block dims ride along unchanged."""
     acfg = jnp.asarray(approx_cfg, jnp.int32)
-    scan_part = acfg[:n_scan].reshape(-1, npat) if n_scan else None
+    scan_part = (acfg[:n_scan].reshape((-1, npat) + acfg.shape[1:])
+                 if n_scan else None)
     rest_part = acfg[n_scan:]
     return scan_part, rest_part
 
@@ -784,9 +909,12 @@ def _decode_block(p, kind, x_t, cl, cfg, pos, *, approx_cfg=0):
     if kind in ("global", "local"):
         res = x_t
         h = _apply_norm(p["norm1"], x_t, cfg)
-        q = _proj(h, p["attn"]["wq"], approx_cfg, p["attn"].get("bq"))
-        k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"))
-        v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"))
+        q = _proj(h, p["attn"]["wq"], approx_cfg, p["attn"].get("bq"), cfg,
+                  cfg.n_heads)
+        k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"), cfg,
+                  cfg.n_kv_heads)
+        v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"), cfg,
+                  cfg.n_kv_heads)
         if cfg.norm == "rms":
             posv = pos[None, None] if pos.ndim == 0 else pos[:, None]
             q = apply_rope(q, posv, cfg.rope_theta)
@@ -812,17 +940,18 @@ def _decode_block(p, kind, x_t, cl, cfg, pos, *, approx_cfg=0):
             # score tensors (it would re-gather the seq-sharded cache)
             from repro.dist.sharding import lsc
             attn = lsc(attn, "batch", None, None, None)
-        y = _attn_out(attn, p["attn"]["wo"], approx_cfg)
+        y = _attn_out(attn, p["attn"]["wo"], approx_cfg, cfg)
         if cfg.post_norm:
             y = _apply_norm(p["post1"], y, cfg)
         x_t = res + y
         if cfg.encoder_decoder and "xattn" in p:
             res = x_t
             h = _apply_norm(p["norm_x"], x_t, cfg)
-            q = _proj(h, p["xattn"]["wq"], approx_cfg)
+            q = _proj(h, p["xattn"]["wq"], approx_cfg, cfg=cfg,
+                      heads=cfg.n_heads)
             attn = decode_attention(q, cl["xk"], cl["xv"],
                                     cl["xk"].shape[1])
-            x_t = res + _attn_out(attn, p["xattn"]["wo"], approx_cfg)
+            x_t = res + _attn_out(attn, p["xattn"]["wo"], approx_cfg, cfg)
         res = x_t
         h = _apply_norm(p["norm2"], x_t, cfg)
         y = _mlp_apply(p["mlp"], h, cfg, approx_cfg)
@@ -833,7 +962,8 @@ def _decode_block(p, kind, x_t, cl, cfg, pos, *, approx_cfg=0):
         res = x_t
         h = _apply_norm(p["norm1"], x_t, cfg)
         y, new_state = recurrent_block(p["rec"], h, approx_cfg=approx_cfg,
-                                       state=cl, decode=True)
+                                       state=cl, decode=True,
+                                       dense_kw=_dense_kw(cfg))
         x_t = res + y
         res = x_t
         h = _apply_norm(p["norm2"], x_t, cfg)
@@ -842,13 +972,15 @@ def _decode_block(p, kind, x_t, cl, cfg, pos, *, approx_cfg=0):
         res = x_t
         h = _apply_norm(p["norm1"], x_t, cfg)
         y, new_state = mlstm_step(p["cell"], h, cl, cfg.n_heads,
-                                  approx_cfg=approx_cfg)
+                                  approx_cfg=approx_cfg,
+                                  dense_kw=_dense_kw(cfg))
         return res + y, new_state
     if kind == "slstm":
         res = x_t
         h = _apply_norm(p["norm1"], x_t, cfg)
         y, new_state = slstm_step(p["cell"], h, cl, cfg.n_heads,
-                                  approx_cfg=approx_cfg)
+                                  approx_cfg=approx_cfg,
+                                  dense_kw=_dense_kw(cfg))
         return res + y, new_state
     raise ValueError(kind)
 
@@ -949,8 +1081,10 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
         x = lsc(x, "batch", None, None)
         if kind in ("global", "local"):
             h = _apply_norm(p["norm1"], x, cfg)
-            k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"))
-            v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"))
+            k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"),
+                      cfg, cfg.n_kv_heads)
+            v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"),
+                      cfg, cfg.n_kv_heads)
             if cfg.norm == "rms":
                 k = apply_rope(k, positions, cfg.rope_theta)
             s_buf = cl["k"].shape[1]
@@ -968,9 +1102,11 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
                       for kk, vv in cl.items()}
             if cfg.encoder_decoder and "xattn" in p:
                 cl = dict(cl)
-                cl["xk"] = _proj(enc_out, p["xattn"]["wk"], approx_cfg
+                cl["xk"] = _proj(enc_out, p["xattn"]["wk"], approx_cfg,
+                                 cfg=cfg, heads=cfg.n_kv_heads
                                  ).astype(cl["xk"].dtype)
-                cl["xv"] = _proj(enc_out, p["xattn"]["wv"], approx_cfg
+                cl["xv"] = _proj(enc_out, p["xattn"]["wv"], approx_cfg,
+                                 cfg=cfg, heads=cfg.n_kv_heads
                                  ).astype(cl["xv"].dtype)
             x = _apply_block(p, kind, x, cfg, positions=positions,
                              approx_cfg=approx_cfg, causal=True,
@@ -980,7 +1116,8 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
         if kind == "recurrent":
             res = x
             h = _apply_norm(p["norm1"], x, cfg)
-            y, state = recurrent_block(p["rec"], h, approx_cfg=approx_cfg)
+            y, state = recurrent_block(p["rec"], h, approx_cfg=approx_cfg,
+                                       dense_kw=_dense_kw(cfg))
             x = res + y
             res = x
             h = _apply_norm(p["norm2"], x, cfg)
@@ -991,15 +1128,18 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
             h = _apply_norm(p["norm1"], x, cfg)
             y = mlstm_parallel(p["cell"], h, cfg.n_heads,
                                approx_cfg=approx_cfg, q_chunk=cfg.q_chunk,
-                               unroll=cfg.unroll_chunks)
+                               unroll=cfg.unroll_chunks,
+                               dense_kw=_dense_kw(cfg))
             state = mlstm_final_state(p["cell"], h, cfg.n_heads,
-                                      approx_cfg=approx_cfg)
+                                      approx_cfg=approx_cfg,
+                                      dense_kw=_dense_kw(cfg))
             return res + y, state
         if kind == "slstm":
             res = x
             h = _apply_norm(p["norm1"], x, cfg)
             y, state = slstm_scan(p["cell"], h, cfg.n_heads,
-                                  approx_cfg=approx_cfg)
+                                  approx_cfg=approx_cfg,
+                                  dense_kw=_dense_kw(cfg))
             return res + y, state
         raise ValueError(kind)
 

@@ -25,6 +25,13 @@ layer the pool runs the LOWEST-ERROR config among the active requests'
 vectors (ranked by measured MRED — config index is ordered by energy
 saving, in which error is non-monotone) — a slot never executes at a
 higher-error config than its request asked for.
+
+PR 2: with ``cfg.mac_backend == "pallas"`` every GEMM runs through the
+fused approx-MAC kernel; ``cfg_groups > 1`` widens all of the above
+from per-layer vectors to per-layer-per-neuron-group (n_layers,
+cfg_groups) matrices (DESIGN.md §3).  Weights are pre-quantized into
+QTensors ONCE at init (``quantize_weights``), so no decode step
+re-quantizes weights inside the traced graph.
 """
 from __future__ import annotations
 
@@ -43,17 +50,13 @@ from .sampling import sample
 
 _ENERGY_PJ = np.asarray([energy_per_mac_pj(c)
                          for c in range(N_CONFIGS)])
-_MRED_CACHE: list[np.ndarray] = []
 
 
 def _mred_table() -> np.ndarray:
     """Per-config measured MRED — the error ranking for the pool join
-    (exhaustive over the 128x128 magnitude space, computed once)."""
-    if not _MRED_CACHE:
-        from repro.core.error_metrics import multiplier_error_stats
-        _MRED_CACHE.append(np.asarray(
-            [multiplier_error_stats(c).mred for c in range(N_CONFIGS)]))
-    return _MRED_CACHE[0]
+    (shared per-process table, see core.error_metrics.mred_table)."""
+    from repro.core.error_metrics import mred_table
+    return mred_table()
 
 
 @dataclass
@@ -73,17 +76,31 @@ class Request:
 
 class Engine:
     def __init__(self, params, cfg: T.ModelConfig, *, max_batch: int = 4,
-                 max_len: int = 512, approx_cfg=0, seed: int = 0):
-        self.params = params
+                 max_len: int = 512, approx_cfg=0, seed: int = 0,
+                 cfg_groups: int = 1, quantize_weights: bool = True):
+        # quantize every dense GEMM weight ONCE at engine init and carry
+        # QTensors through the jitted step functions — no decode step
+        # re-quantizes weights inside the traced graph (PR 2)
+        self.params = (T.quantize_lm_params(params, cfg)
+                       if quantize_weights else params)
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
+        # cfg_groups > 1 widens the knob to per-layer-per-N-block config
+        # matrices (n_layers, cfg_groups): each layer's GEMMs split their
+        # output columns into cfg_groups contiguous neuron groups, each
+        # at its own error config (requires cfg.mac_backend == "pallas")
+        self.cfg_groups = cfg_groups
+        if cfg_groups > 1:
+            assert cfg.mac_backend == "pallas", \
+                "per-block (cfg_groups>1) configs require mac_backend='pallas'"
         self.approx_cfg = self._as_layer_vector(
             0 if approx_cfg is None else approx_cfg)
         self.rng = jax.random.PRNGKey(seed)
         self.queue: list[Request] = []
         self.slots: list[Request | None] = [None] * max_batch
-        self.slot_cfg = np.tile(self.approx_cfg, (max_batch, 1))
+        self.slot_cfg = np.broadcast_to(
+            self.approx_cfg, (max_batch,) + self.approx_cfg.shape).copy()
         # slots whose request carried its OWN approx_cfg are pinned to
         # it; unpinned slots follow the engine config live, so
         # set_approx_cfg retunes in-flight generation at the next tick
@@ -113,14 +130,19 @@ class Engine:
 
     # -- config management ----------------------------------------------
     def _as_layer_vector(self, approx_cfg) -> np.ndarray:
-        """Normalize int / sequence / None to a (n_layers,) int32 vector."""
+        """Normalize int / sequence / None to the engine's config shape:
+        (n_layers,) when cfg_groups == 1, else (n_layers, cfg_groups)
+        (scalars and per-layer vectors broadcast across the groups).
+        One fixed shape keeps every request/retune on the same compiled
+        executables (zero retraces)."""
         if approx_cfg is None:
             return self.approx_cfg.copy()
+        shape = ((self.cfg.n_layers,) if self.cfg_groups == 1
+                 else (self.cfg.n_layers, self.cfg_groups))
         vec = np.asarray(approx_cfg, dtype=np.int32)
-        if vec.ndim == 0:
-            vec = np.full(self.cfg.n_layers, int(vec), np.int32)
-        assert vec.shape == (self.cfg.n_layers,), \
-            (vec.shape, self.cfg.n_layers)
+        if vec.ndim == 1 and self.cfg_groups > 1:
+            vec = vec[:, None]
+        vec = np.broadcast_to(vec, shape).copy()
         assert ((0 <= vec) & (vec < N_CONFIGS)).all(), vec
         return vec
 
@@ -166,10 +188,10 @@ class Engine:
                   for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return self.approx_cfg
-        stack = np.stack(active)                       # (k, n_layers)
+        stack = np.stack(active)            # (k, n_layers[, cfg_groups])
         # rank by (mred, config index): argmin returns the first minimum
         order = np.lexsort((stack, _mred_table()[stack]), axis=0)[0]
-        return np.take_along_axis(stack, order[None, :], axis=0)[0]
+        return np.take_along_axis(stack, order[None, ...], axis=0)[0]
 
     # -- request management --------------------------------------------
     def submit(self, req: Request):
@@ -262,7 +284,14 @@ class Engine:
         (DESIGN.md §2).  saving_frac is derived from the SAME integral
         (1 - modeled/exact), so it reflects executed work, not the
         engine's current setting; before any work it falls back to the
-        current config's modeled saving."""
+        current config's modeled saving.
+
+        Modeling caveat with cfg_groups > 1: the integral weights every
+        (layer, group) cell equally, i.e. it assumes each neuron group
+        covers an equal share of the layer's MACs.  GEMMs narrower than
+        cfg_groups kernel blocks conservatively collapse straddled
+        groups to their lowest-MRED config (DESIGN.md §3), so the
+        reported saving is an upper bound on such layers."""
         n_params = sum(int(np.prod(p.shape))
                        for p in jax.tree.leaves(self.params))
         macs_per_token = 2.0 * n_params / 2   # ~N MACs/token

@@ -6,7 +6,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.approx_mac.ops import approx_mac
+from repro.core.approx_matmul import (approx_dense,
+                                      approx_matmul_operand_blocked)
+from repro.core.quantization import quantize
+from repro.kernels.approx_mac.ops import approx_dense_pallas, approx_mac
 from repro.kernels.approx_mac.ref import approx_mac_matmul_ref
 from repro.kernels.flash_attention.ops import flash_attn
 from repro.nn.attention import ref_attention
@@ -47,6 +50,49 @@ def test_approx_mac_block_shape_invariance(bm, bk, cfg):
     b = jnp.asarray(RNG.integers(-127, 128, (128, 64)), jnp.int8)
     out = approx_mac(a, b, cfg, bm=bm, bn=64, bk=bk, interpret=True)
     ref = approx_mac_matmul_ref(a, b, cfg)
+    assert jnp.array_equal(out, ref)
+
+
+@given(bm=st.sampled_from([64, 128]), bn=st.sampled_from([64, 128]),
+       bk=st.sampled_from([128, 256]))
+@settings(max_examples=8, deadline=None)
+def test_approx_mac_per_block_configs_block_shape_invariance(bm, bn, bk):
+    """Mixed per-N-block configs are defined on the LOGICAL 128-column
+    grid semantics: the result must match the blocked oracle for every
+    (bm, bn, bk) tiling whose n-blocking matches the vector length."""
+    a = jnp.asarray(RNG.integers(-127, 128, (64, 128)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-127, 128, (128, 2 * bn)), jnp.int8)
+    vec = jnp.asarray([1, 29], jnp.int32)
+    out = approx_mac(a, b, vec, bm=bm, bn=bn, bk=bk, interpret=True)
+    ref = approx_matmul_operand_blocked(a, b, vec, bn)
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (100, 200, 60),
+                                   (1, 256, 128)])
+@pytest.mark.parametrize("cfg", [0, 8, 31])
+def test_fused_dense_matches_xla_reference(m, k, n, cfg):
+    """Fused f32-in/f32-out kernel (quantize + truncate + MAC + rescale
+    in ONE pallas_call) vs the three-pass XLA reference: bit-identical,
+    including non-tile-multiple shapes (padding)."""
+    x = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(k, n)) * 0.05, jnp.float32)
+    w_qt = quantize(w, axis=1)
+    out = approx_dense_pallas(x, w_qt, config=cfg, interpret=True,
+                              compute_dtype=jnp.float32)
+    ref = approx_dense(x, w_qt, cfg)
+    assert out.dtype == jnp.float32
+    assert jnp.array_equal(out, ref), (m, k, n, cfg)
+
+
+def test_fused_dense_batched_leading_dims():
+    x = jnp.asarray(RNG.normal(size=(2, 3, 16, 96)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(96, 64)) * 0.1, jnp.float32)
+    w_qt = quantize(w, axis=1)
+    out = approx_dense_pallas(x, w_qt, config=8, interpret=True,
+                              compute_dtype=jnp.float32)
+    ref = approx_dense(x, w_qt, 8)
+    assert out.shape == (2, 3, 16, 64)
     assert jnp.array_equal(out, ref)
 
 

@@ -70,3 +70,21 @@ def test_qtensor_is_pytree():
     assert len(leaves) == 2
     rebuilt = jax.tree.map(lambda x: x, qt)
     assert isinstance(rebuilt, QTensor)
+
+
+def test_qtensor_reshape():
+    import numpy as np
+    import pytest
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 2, 8))
+    # per-tensor scale: any reshape is valid
+    qt = quantize(x)
+    r = qt.reshape(4, 16)
+    assert r.values.shape == (4, 16) and r.axis is None
+    np.testing.assert_array_equal(np.asarray(r.values),
+                                  np.asarray(qt.values).reshape(4, 16))
+    # last-axis (channel) scale: reshape must preserve the channel dim
+    qt2 = quantize(x.reshape(8, 8), axis=1)
+    r2 = qt2.reshape(2, 4, 8)
+    assert r2.axis == 2 and r2.values.shape == (2, 4, 8)
+    with pytest.raises(AssertionError):
+        qt2.reshape(4, 16)          # would mix channels across scales

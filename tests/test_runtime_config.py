@@ -12,12 +12,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.approx_matmul import (approx_matmul_lut,
-                                      approx_matmul_operand)
+from repro.core.approx_matmul import (approx_dense, approx_matmul_lut,
+                                      approx_matmul_lut_blocked,
+                                      approx_matmul_operand,
+                                      approx_matmul_operand_blocked,
+                                      operand_param_table)
 from repro.core.approx_multiplier import (N_CONFIGS, OPERAND_PARAM_TABLE,
                                           operand_params)
-from repro.core.quantization import truncate_operand_lsb
-from repro.kernels.approx_mac.ops import _approx_mac_jit, approx_mac
+from repro.core.quantization import quantize, truncate_operand_lsb
+from repro.kernels.approx_mac.ops import (_approx_dense_fused_jit,
+                                          _approx_mac_jit,
+                                          approx_dense_pallas, approx_mac)
 
 RNG = np.random.default_rng(7)
 A = jnp.asarray(RNG.integers(-127, 128, (32, 64)), jnp.int8)
@@ -84,6 +89,136 @@ def test_pallas_kernel_traced_config_matches_ref(cfg):
     assert jnp.array_equal(out, ref), cfg
 
 
+# --- (b2) per-N-block (per-neuron) config vectors — PR 2 tentpole ----------
+
+def test_operand_param_table_is_hoisted_device_constant():
+    t1 = operand_param_table()
+    t2 = operand_param_table()
+    assert t1 is t2                       # one upload per process
+    np.testing.assert_array_equal(np.asarray(t1), OPERAND_PARAM_TABLE)
+
+
+def test_pallas_kernel_mixed_block_configs_match_operand_oracle():
+    """One GEMM, different error configs per 128-column block — the
+    kernel's per-tile scalar-prefetch vector vs the blocked reference."""
+    a = jnp.asarray(RNG.integers(-127, 128, (32, 64)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-127, 128, (64, 384)), jnp.int8)
+    vec = jnp.asarray([3, 31, 8], jnp.int32)          # 3 blocks of 128
+    out = approx_mac(a, b, vec, interpret=True)
+    ref = approx_matmul_operand_blocked(a, b, vec, 128)
+    assert jnp.array_equal(out, ref)
+    # and each block individually equals the uniform-config kernel
+    for i, c in enumerate([3, 31, 8]):
+        blk = approx_mac(a, b[:, i * 128:(i + 1) * 128], c, interpret=True)
+        assert jnp.array_equal(out[:, i * 128:(i + 1) * 128], blk), c
+
+
+def test_blocked_lut_oracle_composes():
+    """The bit-exact ASIC-model oracle for a mixed per-neuron-block GEMM
+    composes from per-config LUT matmuls (and differs from uniform)."""
+    a = A[:8, :16]
+    b = B[:16, :8]
+    vec = [1, 31]
+    mixed = approx_matmul_lut_blocked(a, b, vec, 4)
+    assert jnp.array_equal(mixed[:, :4], approx_matmul_lut(a, b[:, :4], 1))
+    assert jnp.array_equal(mixed[:, 4:], approx_matmul_lut(a, b[:, 4:], 31))
+    assert not jnp.array_equal(mixed, approx_matmul_lut(a, b, 1))
+
+
+def test_group_vector_spreads_over_blocks():
+    """A config vector shorter than n_blocks maps neuron groups onto
+    contiguous logical column spans (group j owns [j*N/g, (j+1)*N/g))."""
+    a = jnp.asarray(RNG.integers(-127, 128, (16, 64)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-127, 128, (64, 512)), jnp.int8)   # 4 blocks
+    out = approx_mac(a, b, jnp.asarray([2, 31], jnp.int32), interpret=True)
+    ref = approx_matmul_operand_blocked(a, b, [2, 2, 31, 31], 128)
+    assert jnp.array_equal(out, ref)
+
+
+def test_group_vector_conservative_collapse():
+    """Blocks that straddle a neuron-group boundary — or GEMMs too
+    narrow to resolve the groups — run the lowest-measured-MRED config
+    among their groups (never higher error than any covered neuron
+    asked for).  cfg 11 has a higher index but LOWER measured error
+    than cfg 9, so the collapse must rank by error, not index."""
+    from repro.kernels.approx_mac.ops import _mred_table_dev
+    mred = np.asarray(_mred_table_dev())
+    assert mred[11] < mred[9]
+    a = jnp.asarray(RNG.integers(-127, 128, (16, 64)), jnp.int8)
+    # narrow GEMM: one 128-col block covering both groups -> cfg 11
+    b1 = jnp.asarray(RNG.integers(-127, 128, (64, 128)), jnp.int8)
+    out = approx_mac(a, b1, jnp.asarray([9, 11], jnp.int32), interpret=True)
+    assert jnp.array_equal(out, approx_mac(a, b1, 11, interpret=True))
+    # n=192: block 0 (cols 0-127) straddles the group boundary at 96 ->
+    # lowest-MRED of the two; block 1 (cols 128-191) is inside group 1
+    b2 = jnp.asarray(RNG.integers(-127, 128, (64, 192)), jnp.int8)
+    out = approx_mac(a, b2, jnp.asarray([11, 9], jnp.int32), interpret=True)
+    ref = approx_matmul_operand_blocked(a, b2, [11, 9], 128)
+    assert jnp.array_equal(out, ref)
+    # g == n_blocks but N % bn != 0: block spans != group spans, so the
+    # per-block fast path must NOT apply — with groups [31, 0] over
+    # n=200, group 1 (cols 100-199, exact) overlaps block 0, which must
+    # collapse to exact; block 1 lies inside group 1 -> whole GEMM exact
+    b3 = jnp.asarray(RNG.integers(-127, 128, (64, 200)), jnp.int8)
+    out = approx_mac(a, b3, jnp.asarray([31, 0], jnp.int32), interpret=True)
+    assert jnp.array_equal(out, approx_mac(a, b3, 0, interpret=True))
+
+
+# --- (b3) fused float-in/float-out dense on the kernel path ----------------
+
+X_F = jnp.asarray(RNG.normal(size=(20, 64)), jnp.float32)
+W_F = jnp.asarray(RNG.normal(size=(64, 48)) * 0.05, jnp.float32)
+
+
+@pytest.mark.parametrize("cfg", range(N_CONFIGS))
+def test_fused_dense_pallas_bit_identical_to_xla_path(cfg):
+    """Acceptance: the ONE-pallas_call fused path (in-kernel activation
+    quantization + rescale epilogue) is bit-identical to the XLA operand
+    path for every config."""
+    w_qt = quantize(W_F, axis=1)
+    ref = approx_dense(X_F, w_qt, _t(cfg))
+    out = approx_dense_pallas(X_F, w_qt, config=_t(cfg), interpret=True,
+                              compute_dtype=jnp.float32)
+    assert jnp.array_equal(out, ref), cfg
+
+
+def test_fused_matches_unfused_and_per_tensor_scale():
+    w_qt = quantize(W_F)                    # per-tensor weight scale
+    for cfg in (0, 8, 31):
+        ref = jnp.asarray(approx_dense(X_F, w_qt, cfg), jnp.float32)
+        fused = approx_dense_pallas(X_F, w_qt, config=cfg, interpret=True,
+                                    compute_dtype=jnp.float32)
+        unfused = approx_dense_pallas(X_F, w_qt, config=cfg, fused=False,
+                                      interpret=True,
+                                      compute_dtype=jnp.float32)
+        assert jnp.array_equal(fused, ref), cfg
+        assert jnp.array_equal(unfused, ref), cfg
+
+
+def test_fused_dense_mixed_block_configs_match_blocked_composition():
+    """dense-level per-neuron knob: a (2,) config vector over a 256-wide
+    GEMM == concatenation of two uniform-config fused GEMMs == the
+    blocked operand oracle on the quantized operands."""
+    w = jnp.asarray(RNG.normal(size=(64, 256)) * 0.05, jnp.float32)
+    w_qt = quantize(w, axis=1)
+    vec = jnp.asarray([5, 24], jnp.int32)
+    out = approx_dense_pallas(X_F, w_qt, config=vec, interpret=True,
+                              compute_dtype=jnp.float32)
+    x_qt = quantize(X_F)
+    acc = approx_matmul_operand_blocked(x_qt.values, w_qt.values, vec, 128)
+    ref = acc.astype(jnp.float32) * x_qt.scale * w_qt.scale[None, :]
+    assert jnp.array_equal(out, ref)
+
+
+def test_dense_layer_pallas_backend_bit_identical():
+    from repro.nn.layers import dense
+    for cfg in (0, 1, 8, 16, 31):
+        ref = dense(X_F, W_F, approx_cfg=_t(cfg), compute_dtype=jnp.float32)
+        out = dense(X_F, W_F, approx_cfg=_t(cfg), backend="pallas",
+                    interpret=True, compute_dtype=jnp.float32)
+        assert jnp.array_equal(out, ref), cfg
+
+
 # --- (c) zero recompilation across config sweeps ---------------------------
 
 def test_operand_matmul_no_retrace_over_32_configs():
@@ -101,6 +236,25 @@ def test_pallas_kernel_no_retrace_over_32_configs():
     for cfg in range(N_CONFIGS):
         approx_mac(A, B, cfg, interpret=True)
     assert _approx_mac_jit._cache_size() == n0
+
+
+def test_pallas_per_block_vectors_no_retrace():
+    """Sweeping per-N-block config VECTORS (fixed length) shares one
+    executable — both the int kernel and the fused dense path."""
+    b = jnp.asarray(RNG.integers(-127, 128, (64, 256)), jnp.int8)
+    approx_mac(A, b, jnp.zeros((2,), jnp.int32), interpret=True)
+    n0 = _approx_mac_jit._cache_size()
+    w_qt = quantize(jnp.asarray(RNG.normal(size=(64, 256)) * 0.05,
+                                jnp.float32), axis=1)
+    approx_dense_pallas(X_F, w_qt, config=jnp.zeros((2,), jnp.int32),
+                        interpret=True)
+    f0 = _approx_dense_fused_jit._cache_size()
+    for cfg in range(N_CONFIGS):
+        vec = jnp.asarray([cfg, (cfg + 7) % N_CONFIGS], jnp.int32)
+        approx_mac(A, b, vec, interpret=True)
+        approx_dense_pallas(X_F, w_qt, config=vec, interpret=True)
+    assert _approx_mac_jit._cache_size() == n0
+    assert _approx_dense_fused_jit._cache_size() == f0
 
 
 # --- paper-MLP datapath: integer logits bit-identical ----------------------
@@ -250,6 +404,145 @@ def test_engine_pool_config_is_lowest_error_join():
                        approx_cfg=jnp.asarray([11, 31])))
     eng._admit()
     np.testing.assert_array_equal(eng._pool_cfg(), [11, 8])
+
+
+# --- pallas serving backend (PR 2 tentpole) --------------------------------
+
+def _small_model_pallas():
+    import dataclasses
+    T, cfg, params = _small_model()
+    cfg_p = dataclasses.replace(cfg, mac_backend="pallas",
+                                mac_interpret=True)
+    return T, cfg, cfg_p, params
+
+
+def test_quantize_lm_params_is_bit_identical_to_per_call_quantize():
+    """Pre-quantizing GEMM weights once (engine init) must not change a
+    single bit vs quantizing inside every call — same arrays, same
+    per-output-channel scales, just hoisted out of the traced step."""
+    T, cfg, params = _small_model()
+    qp = T.quantize_lm_params(params, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    for c in (0, 8, 31):
+        h_ref = T.forward(params, cfg, toks, approx_cfg=_t(c))
+        h_q = T.forward(qp, cfg, toks, approx_cfg=_t(c))
+        np.testing.assert_array_equal(np.asarray(h_ref), np.asarray(h_q))
+
+
+def test_forward_pallas_backend_bit_identical_to_xla():
+    T, cfg, cfg_p, params = _small_model_pallas()
+    qp = T.quantize_lm_params(params, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    for c in (0, 8, 31):
+        h_x = T.forward(qp, cfg, toks, approx_cfg=_t(c))
+        h_p = T.forward(qp, cfg_p, toks, approx_cfg=_t(c))
+        np.testing.assert_array_equal(np.asarray(h_x), np.asarray(h_p))
+
+
+def test_forward_per_layer_per_block_config_matrix():
+    """(n_layers, n_groups) config matrices flow through forward on the
+    pallas backend; uniform rows reproduce the per-layer vector."""
+    T, cfg, cfg_p, params = _small_model_pallas()
+    qp = T.quantize_lm_params(params, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    uni = T.forward(qp, cfg_p, toks,
+                    approx_cfg=jnp.asarray([8, 31], jnp.int32))
+    mat = T.forward(qp, cfg_p, toks,
+                    approx_cfg=jnp.asarray([[8, 8], [31, 31]], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(uni), np.asarray(mat))
+    mixed = T.forward(qp, cfg_p, toks,
+                      approx_cfg=jnp.asarray([[0, 31], [8, 16]], jnp.int32))
+    assert mixed.shape == uni.shape
+
+
+def test_engine_pallas_backend_32_config_sweep_zero_retraces():
+    """Acceptance: a 0-31 sweep through the Engine on the pallas backend
+    (fused kernel, pre-quantized QTensor weights, per-layer-per-block
+    config matrices) completes with zero retraces after warmup."""
+    from repro.serve.engine import Engine, Request
+    T, cfg, cfg_p, params = _small_model_pallas()
+    eng = Engine(params, cfg_p, max_batch=2, max_len=32, cfg_groups=2)
+    assert eng.approx_cfg.shape == (2, 2)
+    prompt = np.arange(8) % 64
+
+    def one_round(c):
+        eng.set_approx_cfg(c)
+        eng.submit(Request(rid=int(np.max(c)), prompt=prompt,
+                           max_new_tokens=2))
+        done, eng.completed = eng.run(max_ticks=50), []
+        assert len(done) == 1 and len(done[0].tokens) == 2
+
+    one_round(0)   # warmup: compiles one prefill + one decode executable
+    sizes = (eng._decode._cache_size(), eng._prefill._cache_size())
+    for c in range(N_CONFIGS):
+        one_round(c)
+    # per-layer-per-block retunes ride the same executables
+    one_round(np.asarray([[0, 31], [8, 16]], np.int32))
+    eng.apply_allocation({"layer_0": 4, 0: 27})
+    eng.submit(Request(rid=77, prompt=prompt, max_new_tokens=2,
+                       approx_cfg=31))
+    done, eng.completed = eng.run(max_ticks=50), []
+    assert len(done) == 1
+    assert (eng._decode._cache_size(), eng._prefill._cache_size()) == sizes
+
+
+def test_recurrent_archs_pallas_backend_and_per_block_configs():
+    """The backend switch reaches the recurrent/mlstm/slstm cells'
+    projections too (dense_kw threading): pallas == xla on a hybrid
+    global+recurrent model, and per-layer-per-block matrices trace
+    (regression: the cells used to drop the backend, crashing vector
+    configs and silently running XLA)."""
+    import dataclasses
+    T = __import__("repro.nn.transformer", fromlist=["x"])
+    base = dict(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                head_dim=16, d_ff=64, vocab_size=64, lru_width=32,
+                pattern=("global", "recurrent"), scan_layers=False,
+                remat=False, q_chunk=8, loss_chunks=1,
+                compute_dtype=jnp.float32)
+    cfg_p = T.ModelConfig(**base, mac_backend="pallas", mac_interpret=True)
+    cfg_x = T.ModelConfig(**base)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg_p)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 64)
+    for c in (0, 8):
+        hx = T.forward(params, cfg_x, toks, approx_cfg=_t(c))
+        hp = T.forward(params, cfg_p, toks, approx_cfg=_t(c))
+        np.testing.assert_array_equal(np.asarray(hx), np.asarray(hp))
+    h = T.forward(params, cfg_p, toks,
+                  approx_cfg=jnp.asarray([[0, 31], [8, 16]], jnp.int32))
+    assert h.shape == (2, 8, 32)
+    for pat in (("mlstm",), ("slstm",)):
+        c2 = dataclasses.replace(cfg_p, pattern=pat, lru_width=0)
+        p2, _ = T.init_lm(jax.random.PRNGKey(0), c2)
+        h2 = T.forward(p2, c2, toks,
+                       approx_cfg=jnp.asarray([[0, 31], [8, 16]], jnp.int32))
+        assert h2.shape == (2, 8, 32), pat
+
+
+def test_engine_pool_join_per_layer_per_block():
+    """The lowest-measured-error pool join extends elementwise to
+    (n_layers, cfg_groups) matrices (cfg 11 has a higher index but lower
+    MRED than cfg 9 — the join must rank by error, not index)."""
+    from repro.serve.engine import Engine, Request, _mred_table
+    T, cfg, cfg_p, params = _small_model_pallas()
+    eng = Engine(params, cfg_p, max_batch=2, max_len=32, cfg_groups=2)
+    assert _mred_table()[11] < _mred_table()[9]
+    eng.submit(Request(rid=0, prompt=np.arange(6) % 64, max_new_tokens=8,
+                       approx_cfg=np.asarray([[9, 8], [31, 0]])))
+    eng.submit(Request(rid=1, prompt=np.arange(9) % 64, max_new_tokens=8,
+                       approx_cfg=np.asarray([[11, 31], [8, 0]])))
+    eng._admit()
+    np.testing.assert_array_equal(eng._pool_cfg(), [[11, 8], [8, 0]])
+
+
+def test_quantized_mlp_pallas_method_matches_operand():
+    """The paper's 62-30-10 network through the serving kernel: the
+    "pallas" method is bit-identical to the "operand" XLA adaptation."""
+    qm, x = _toy_qmlp()
+    xq = qm.quantize_input(x)
+    for cfg in (0, 8, 31):
+        ref = qm.apply(xq, cfg, "operand")
+        out = qm.apply(xq, _t(cfg), "pallas", interpret=True)
+        assert jnp.array_equal(out, ref), cfg
 
 
 # --- controller backoff regression (PR 1 satellite) -------------------------
