@@ -224,6 +224,81 @@ def bench_pallas_path():
         json.dump(out, f, indent=2)
 
 
+def bench_moe_path():
+    """The PR-3 tentpole quantified: grouped expert GEMM vs lax.map.
+
+    Three A/Bs on a dense-MoE FFN through the pallas backend —
+      * expert loop: ONE grouped pallas_call (expert axis in the kernel
+        grid) vs one kernel launch per expert under lax.map;
+      * per-expert knob: a mixed (E, 1) per-expert config matrix on the
+        same grouped executable (the expert knob costs nothing extra);
+      * expert-count scaling: both paths at E = 2 / 4 / 8;
+    Emits CSV rows AND machine-readable BENCH_moe_pallas.json (uploaded
+    by CI).  On CPU the kernels run in interpret mode — the numbers are
+    correctness-path timings; TPU is the performance target.
+    """
+    import json
+
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import time_call
+    from repro.kernels.approx_mac.ops import default_interpret
+    from repro.nn.moe import moe_ffn
+
+    interpret = default_interpret()
+    iters = 3 if interpret else 20
+    t, d, f, k = (64, 64, 128, 2) if interpret else (4096, 1024, 4096, 2)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    mode = "interpret" if interpret else "tpu"
+    scaling = []
+    for e in (2, 4, 8):
+        params = {
+            "router": jnp.asarray(rng.normal(size=(d, e)) * 0.5,
+                                  jnp.float32),
+            "w_gate": jnp.asarray(rng.normal(size=(e, d, f)) / np.sqrt(d),
+                                  jnp.float32),
+            "w_up": jnp.asarray(rng.normal(size=(e, d, f)) / np.sqrt(d),
+                                jnp.float32),
+            "w_down": jnp.asarray(rng.normal(size=(e, f, d)) / np.sqrt(f),
+                                  jnp.float32),
+        }
+
+        def run(grouped, cfg):
+            fn = jax.jit(lambda xx, cc: moe_ffn(
+                xx, params, n_experts=e, top_k=k, capacity_factor=1.25,
+                n_groups=1, approx_cfg=cc, backend="pallas",
+                interpret=interpret, grouped=grouped)[0])
+            return time_call(fn, x, cfg, iters=iters)
+
+        cfg8 = jnp.asarray(8, jnp.int32)
+        t_map = run(False, cfg8)
+        t_grp = run(True, cfg8)
+        # per-expert knob: one config per expert, same grouped executable
+        cfg_e = jnp.asarray([(31 * i) // max(e - 1, 1)
+                             for i in range(e)], jnp.int32)[:, None]
+        t_mix = run(True, cfg_e)
+        scaling.append({"experts": e, "lax_map_us": t_map,
+                        "grouped_us": t_grp, "speedup": t_map / t_grp,
+                        "mixed_per_expert_us": t_mix,
+                        "per_expert_overhead": t_mix / t_grp})
+        print(f"moe_path_laxmap_e{e},{t_map:.1f},mode={mode}")
+        print(f"moe_path_grouped_e{e},{t_grp:.1f},"
+              f"laxmap_vs_grouped={t_map / t_grp:.2f}x")
+        print(f"moe_path_mixed_per_expert_e{e},{t_mix:.1f},"
+              f"per_expert_overhead={t_mix / t_grp:.2f}x")
+
+    out = {
+        "bench": "moe_path",
+        "mode": mode,
+        "shape": {"tokens": t, "d_model": d, "d_ff": f, "top_k": k},
+        "config": 8,
+        "expert_scaling": scaling,
+    }
+    with open("BENCH_moe_pallas.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+
+
 def bench_pallas():
     """CI entry: interpret-mode kernel timings + the fused-path A/B."""
     bench_pallas_kernels_interpret()
@@ -314,6 +389,7 @@ BENCHES = {
     "approx_mac": bench_approx_mac_kernel,
     "pallas": bench_pallas,
     "pallas_path": bench_pallas_path,
+    "moe_path": bench_moe_path,
     "lm_energy": bench_lm_energy_model,
     "roofline": bench_roofline_table,
     "runtime_config": bench_runtime_config_switch,

@@ -223,6 +223,14 @@ def approx_dense(x, w_qt: QTensor, config: int, *, method: str = "operand"):
 
     Activations are dynamically quantized per-tensor; the integer result
     is rescaled back to f32.  `method` in {"operand", "lut"}.
+
+    Rescale convention (shared by every approx path in the repo): the
+    COMBINED dequant scale ``x_scale * w_scale`` is rounded ONCE and the
+    accumulator is multiplied by it in a single f32 multiply.  A
+    two-multiply chain ``(acc * x_scale) * w_scale`` is not
+    association-stable under XLA (the simplifier regroups the cheap
+    scalar/broadcast product), so it cannot be reproduced bit-for-bit
+    across differently-compiled paths; the single-multiply form can.
     """
     from .quantization import quantize
     x_qt = quantize(x)
@@ -231,7 +239,7 @@ def approx_dense(x, w_qt: QTensor, config: int, *, method: str = "operand"):
     else:
         acc = approx_matmul_operand(x_qt.values, w_qt.values, config)
     w_scale = w_qt.scale if w_qt.axis is None else w_qt.scale[None, :]
-    return acc.astype(jnp.float32) * x_qt.scale * w_scale
+    return acc.astype(jnp.float32) * (x_qt.scale * w_scale)
 
 
 N_APPROX_CONFIGS = N_CONFIGS

@@ -31,21 +31,33 @@ QMAX = 127
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class QTensor:
-    """int8 values + float scale; scale broadcasts along `axis`."""
+    """int8 values + float scale; scale broadcasts along `axis`.
+
+    STACKED containers (scan-stacked layer weights, MoE expert banks):
+    the scale may carry leading batch axes — values (E, ..., C) with
+    scale (E, C) — and the aux `axis` then refers to the UNSTACKED
+    per-item layout (the layout consumers see after lax.scan slicing or
+    ``take``).  `scale.ndim - 1` leading dims of `values` are treated as
+    stacked axes everywhere below."""
     values: Any          # int8 array
     scale: Any           # f32 scalar or per-channel vector
     axis: int | None = None   # channel axis of `scale` (None = per-tensor)
 
+    def _lead_base_axis(self):
+        """(n_lead, base_ndim, channel axis within the base layout)."""
+        n_lead = jnp.ndim(self.scale) - 1
+        base_ndim = self.values.ndim - n_lead
+        return n_lead, base_ndim, self.axis % base_ndim
+
     def dequantize(self):
         scale = self.scale
         if self.axis is not None:
-            # guards against dequantizing a scan-STACKED container whose
-            # aux axis refers to the unstacked per-layer layout (see
-            # transformer._vmapped_quantize) — slice the layer out first
-            assert np.prod(scale.shape) == self.values.shape[self.axis], \
+            n_lead, base_ndim, axis = self._lead_base_axis()
+            assert scale.shape[-1] == self.values.shape[n_lead + axis] \
+                and scale.shape[:n_lead] == self.values.shape[:n_lead], \
                 (scale.shape, self.values.shape, self.axis)
-            shape = [1] * self.values.ndim
-            shape[self.axis] = -1
+            shape = list(scale.shape[:n_lead]) + [1] * base_ndim
+            shape[n_lead + axis] = -1
             scale = jnp.reshape(scale, shape)
         return self.values.astype(jnp.float32) * scale
 
@@ -55,20 +67,35 @@ class QTensor:
 
     def reshape(self, *shape):
         """Reshape `values`; valid only while the scale stays broadcastable
-        (per-tensor scale, or a reshape that keeps the scale axis as the
-        last dim — e.g. (d, h, hd) -> (d, h*hd) with an axis=-1 scale of
-        size h*hd is NOT expressible pre-reshape, so pre-quantized layer
+        (per-tensor scale, or a reshape that keeps the channel axis as
+        the last dim — and, for stacked containers such as an (E, in,
+        out) expert bank with (E, out) scales, the leading stacked axes
+        too.  E.g. (d, h, hd) -> (d, h*hd) with an axis=-1 scale of size
+        h*hd is NOT expressible pre-reshape, so pre-quantized layer
         weights are stored in their 2D GEMM layout instead)."""
         if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
             shape = tuple(shape[0])
         vals = self.values.reshape(shape)
         if self.axis is None:
             return QTensor(vals, self.scale, None)
-        axis = self.axis % self.values.ndim
-        assert axis == self.values.ndim - 1 and \
-            vals.shape[-1] == self.values.shape[-1], \
-            "reshape must preserve the scale (channel) axis"
-        return QTensor(vals, self.scale, vals.ndim - 1)
+        n_lead, _, axis = self._lead_base_axis()
+        assert n_lead + axis == self.values.ndim - 1 and \
+            vals.shape[-1] == self.values.shape[-1] and \
+            vals.shape[:n_lead] == self.values.shape[:n_lead], \
+            "reshape must preserve the scale (channel/stacked) axes"
+        return QTensor(vals, self.scale, vals.ndim - n_lead - 1)
+
+    def take(self, idx):
+        """Index one item out of a stacked container along the leading
+        stacked axis (e.g. expert e's (in, out) weights + (out,) scale
+        from an (E, in, out) bank).  `idx` may be a Python int or a
+        traced int32 scalar; the aux `axis` already refers to the
+        unstacked layout, so it carries over unchanged."""
+        vals = self.values[idx]
+        scale = self.scale
+        if self.axis is not None and jnp.ndim(scale) > 1:
+            scale = scale[idx]
+        return QTensor(vals, scale, self.axis)
 
     def tree_flatten(self):
         return (self.values, self.scale), (self.axis,)

@@ -19,7 +19,7 @@ consequences:
     error configs — the hardware's per-MAC (per-neuron) granularity,
     still inside a single compiled executable (DESIGN.md §3).
 
-Two kernel variants share the truncation body:
+Three kernel variants share the truncation body:
 
   * ``approx_mac_matmul``      — int8 x int8 -> int32 (quantized inputs)
   * ``approx_mac_fused_matmul``— f32 x int8 -> f32: dynamic activation
@@ -27,6 +27,14 @@ Two kernel variants share the truncation body:
     the f32 rescale epilogue run INSIDE the kernel, so a float-in /
     float-out approx dense is one pallas_call — no int8 activation or
     int32 accumulator tensor ever round-trips through HBM.
+  * ``approx_mac_grouped_matmul`` — the fused variant with a leading
+    EXPERT grid axis (DESIGN.md §4): one pallas_call computes E
+    independent GEMMs against a stacked (E, K, N) weight bank — the MoE
+    expert loop folded into the kernel grid, no per-expert dispatch.
+    Per-expert valid-row counts ride as scalar-prefetch metadata so
+    empty / ragged expert slices skip their MXU work, and the config
+    operand widens to (E, n_blocks, 4) — the error knob becomes
+    per-EXPERT (x per-neuron-block) inside one compiled kernel.
 
 Tiling: grid (M/bm, N/bn, K/bk), A tile (bm, bk) and B tile (bk, bn) in
 VMEM, int32 accumulator scratch (bm, bn).  bm = bn = 128 and bk = 256
@@ -84,16 +92,18 @@ def _kernel(cfg_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps):
         o_ref[...] = acc_ref[...]
 
 
-def _fused_kernel(cfg_ref, xscale_ref, x_ref, b_ref, wscale_ref, o_ref,
+def _fused_kernel(cfg_ref, xscale_ref, x_ref, b_ref, scale_ref, o_ref,
                   acc_ref, *, k_steps):
     """Float-in/float-out variant: quantize the f32 activation tile with
     the prefetched per-tensor scale, truncate, int8 MAC, and rescale to
     f32 in the epilogue — all on VMEM-resident tiles.
 
     The quantize/rescale arithmetic mirrors core.quantization.quantize
-    and core.approx_matmul.approx_dense op-for-op (same round/clip/cast
-    and the same f32 multiply order), so the fused path is bit-identical
-    to the unfused XLA operand path."""
+    and core.approx_matmul.approx_dense op-for-op: scale_ref carries the
+    COMBINED x_scale * w_scale row (rounded once by the wrapper), so the
+    epilogue is a SINGLE f32 multiply with no association freedom — XLA
+    cannot regroup it differently across paths, keeping the fused path
+    bit-identical to the unfused XLA operand path."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -110,8 +120,7 @@ def _fused_kernel(cfg_ref, xscale_ref, x_ref, b_ref, wscale_ref, o_ref,
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _done():
-        o_ref[...] = (acc_ref[...].astype(jnp.float32) * x_scale
-                      * wscale_ref[...])
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * scale_ref[...]
 
 
 def config_operand(config, n_blocks: int = 1) -> jax.Array:
@@ -143,12 +152,14 @@ def _grid_call(kernel, n_prefetch, grid, in_specs, out_shape, scratch,
                interpret):
     """pallas_call through PrefetchScalarGridSpec when available, else
     plain SMEM inputs (same kernel signature; loses only the prefetch
-    hint).  in_specs are the non-scalar specs with index maps taking
-    (i, j, ks) — prefetch args are appended automatically."""
+    hint).  in_specs are the non-scalar specs with index maps taking one
+    argument per grid dimension (the contraction dim is last/innermost)
+    — prefetch args are appended automatically."""
+    ng = len(grid)
     common = dict(
         out_shape=out_shape,
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel",) * (ng - 1) + ("arbitrary",)),
         interpret=interpret,
     )
     bspecs, ospec = in_specs
@@ -157,7 +168,7 @@ def _grid_call(kernel, n_prefetch, grid, in_specs, out_shape, scratch,
         index_map = spec.index_map
         return pl.BlockSpec(
             spec.block_shape,
-            lambda i, j, ks, *_, _m=index_map: _m(i, j, ks))
+            lambda *a, _m=index_map: _m(*a[:ng]))
 
     if hasattr(pltpu, "PrefetchScalarGridSpec"):
         grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -209,23 +220,25 @@ def approx_mac_matmul(a, b, config=0, *, bm: int = 128,
     return call(config_operand(config, n // bn), a, b)
 
 
-def approx_mac_fused_matmul(x, w_q, w_scale_row, x_scale, config=0, *,
+def approx_mac_fused_matmul(x, w_q, scale_row, x_scale, config=0, *,
                             bm: int = 128, bn: int = 128, bk: int = 256,
                             interpret: bool = False):
     """Fused float-in/float-out approx GEMM: ONE pallas_call.
 
     x: (M, K) f32 activations (pre-padded); w_q: (K, N) int8;
-    w_scale_row: (1, N) f32 per-column weight scales (broadcast a
-    per-tensor scale before calling); x_scale: (1,) f32 per-tensor
+    scale_row: (1, N) f32 COMBINED dequant scales — x_scale * w_scale
+    per column, rounded once by the caller so the kernel epilogue is a
+    single association-free multiply; x_scale: (1,) f32 per-tensor
     activation scale (abs-max/127, computed by the caller's single
-    reduction pass); config: as in approx_mac_matmul.  Returns (M, N)
-    f32 = dequantized approximate product — the int8 activations and the
-    int32 accumulator exist only in VMEM.
+    reduction pass, used for the in-kernel quantize); config: as in
+    approx_mac_matmul.  Returns (M, N) f32 = dequantized approximate
+    product — the int8 activations and the int32 accumulator exist only
+    in VMEM.
     """
     m, k = x.shape
     k2, n = w_q.shape
-    assert k == k2 and w_scale_row.shape == (1, n), \
-        (x.shape, w_q.shape, w_scale_row.shape)
+    assert k == k2 and scale_row.shape == (1, n), \
+        (x.shape, w_q.shape, scale_row.shape)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
         (m, n, k, bm, bn, bk)
     k_steps = k // bk
@@ -243,4 +256,111 @@ def approx_mac_fused_matmul(x, w_q, w_scale_row, x_scale, config=0, *,
     )
     return call(config_operand(config, n // bn),
                 jnp.asarray(x_scale, jnp.float32).reshape(1),
-                x.astype(jnp.float32), w_q, w_scale_row)
+                x.astype(jnp.float32), w_q, scale_row)
+
+
+# ---------------------------------------------------------------------------
+# grouped (MoE expert-bank) variant
+# ---------------------------------------------------------------------------
+
+def _grouped_kernel(cfg_ref, rows_ref, xscale_ref, x_ref, b_ref, scale_ref,
+                    o_ref, acc_ref, *, k_steps, bm):
+    """One (expert, m-block, n-block, k-step) grid cell of the grouped
+    fused GEMM.  cfg_ref: (E, n_blocks, 4) SMEM — expert e's n-block j
+    runs its own (depth_a, depth_b, gate, rtn); rows_ref: (E,) SMEM
+    valid-row counts — an m-block with no valid row skips the MXU work
+    entirely (its accumulator stays zero, so the epilogue writes zeros:
+    exactly what computing the zero-masked rows would produce).
+    scale_ref carries the COMBINED x_scale * w_scale rows (one rounding
+    in the wrapper, one association-free epilogue multiply here — see
+    _fused_kernel)."""
+    e, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(rows_ref[e] > i * bm)
+    def _mac():
+        x_scale = xscale_ref[0]
+        depth_a, depth_b = cfg_ref[e, j, 0], cfg_ref[e, j, 1]
+        gate, rtn = cfg_ref[e, j, 2], cfg_ref[e, j, 3]
+        x_q = jnp.clip(jnp.round(x_ref[0] / x_scale), -QMAX, QMAX
+                       ).astype(jnp.int8)
+        a = _truncate(x_q, depth_a, gate, rtn)
+        b = _truncate(b_ref[0], depth_b, gate, rtn)
+        acc_ref[...] += jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(jnp.float32) * scale_ref[0]
+
+
+def grouped_config_operand(config, n_experts: int,
+                           n_blocks: int = 1) -> jax.Array:
+    """(E, n_blocks, 4) int32 scalar-prefetch operand for the grouped
+    kernel.  `config` may be a Python int / traced scalar (one config
+    for every expert and block), an (E,) per-expert vector, or an
+    (E, n_blocks) per-expert-per-block matrix.  Group vectors shorter
+    than n_blocks are a wrapper-level concept (ops expands them row-wise
+    with the same conservative collapse as the dense path)."""
+    if isinstance(config, (tuple, list)):
+        config = jnp.asarray(config, jnp.int32)
+    if isinstance(config, jax.Array):
+        cfg = jnp.asarray(config, jnp.int32)
+        if cfg.ndim == 0:
+            cfg = jnp.broadcast_to(cfg, (n_experts, n_blocks))
+        elif cfg.ndim == 1:
+            assert cfg.shape == (n_experts,), (cfg.shape, n_experts)
+            cfg = jnp.broadcast_to(cfg[:, None], (n_experts, n_blocks))
+        else:
+            assert cfg.shape == (n_experts, n_blocks), \
+                (cfg.shape, n_experts, n_blocks)
+        return operand_param_table()[cfg]
+    return jnp.broadcast_to(jnp.asarray(OPERAND_PARAM_TABLE[int(config)]),
+                            (n_experts, n_blocks, 4))
+
+
+def approx_mac_grouped_matmul(x, w_q, scale_rows, x_scale, group_rows,
+                              config=0, *, bm: int = 128, bn: int = 128,
+                              bk: int = 256, interpret: bool = False):
+    """Grouped fused approx GEMM over an expert bank: ONE pallas_call.
+
+    x: (E, M, K) f32 per-expert activation slices (pre-padded; rows at
+    index >= group_rows[e] must be zero — ops masks them); w_q:
+    (E, K, N) int8 stacked weight bank; scale_rows: (E, N) f32 COMBINED
+    dequant scales (x_scale * per-expert per-column w_scale, rounded
+    once by the caller); x_scale: (1,) f32 shared per-tensor activation
+    scale (for the in-kernel quantize); group_rows: (E,) int32 valid-row
+    counts (ragged/empty experts skip their m-blocks); config: see
+    grouped_config_operand.  Returns (E, M, N) f32 — E dequantized
+    approximate products from one kernel launch, each expert (and each
+    of its N-blocks) at its own error config.  Grid (E, M/bm, N/bn,
+    K/bk); the expert axis is just the outermost parallel grid
+    dimension, so folding the expert loop into the kernel costs no extra
+    HBM traffic and no per-expert dispatch."""
+    e, m, k = x.shape
+    e2, k2, n = w_q.shape
+    assert e == e2 and k == k2 and scale_rows.shape == (e, n), \
+        (x.shape, w_q.shape, scale_rows.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+    kernel = lambda *refs: _grouped_kernel(*refs, k_steps=k_steps, bm=bm)
+    call = _grid_call(
+        kernel, 3, (e, m // bm, n // bn, k_steps),
+        ([
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, ks: (g, i, ks)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, ks: (g, ks, j)),
+            pl.BlockSpec((1, bn), lambda g, i, j, ks: (g, j)),
+        ], pl.BlockSpec((1, bm, bn), lambda g, i, j, ks: (g, i, j))),
+        jax.ShapeDtypeStruct((e, m, n), jnp.float32),
+        [pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret,
+    )
+    return call(grouped_config_operand(config, e, n // bn),
+                jnp.asarray(group_rows, jnp.int32).reshape(e),
+                jnp.asarray(x_scale, jnp.float32).reshape(1),
+                x.astype(jnp.float32), w_q, scale_rows)

@@ -14,8 +14,12 @@ fused-vs-unfused A/B in benchmarks.
 
 Both accept per-N-column-block config vectors (the per-neuron knob); see
 ``approx_mac.config_operand`` for the accepted config forms.
-``autotune_block_shapes`` sweeps (bm, bn, bk) candidates for a GEMM
-shape and returns the measured ranking (BENCH_pallas_path.json).
+``approx_dense_grouped_pallas`` is the grouped-expert twin (DESIGN.md
+§4): E GEMMs against a stacked (E, K, N) QTensor bank in ONE
+pallas_call, per-expert(-per-block) configs and ragged/empty expert
+slices included.  ``autotune_block_shapes`` sweeps (bm, bn, bk)
+candidates for a GEMM shape and returns the measured ranking
+(BENCH_pallas_path.json).
 """
 from __future__ import annotations
 
@@ -27,7 +31,8 @@ import jax.numpy as jnp
 
 from repro.core.quantization import QMAX, QTensor, compute_scale
 
-from .approx_mac import approx_mac_fused_matmul, approx_mac_matmul
+from .approx_mac import (approx_mac_fused_matmul, approx_mac_grouped_matmul,
+                         approx_mac_matmul)
 
 
 def default_interpret() -> bool:
@@ -36,6 +41,7 @@ def default_interpret() -> bool:
 
 
 _MRED_RANK_DEV: list = []
+_ERROR_RANK_DEV: list = []
 
 
 def _mred_table_dev():
@@ -44,6 +50,39 @@ def _mred_table_dev():
     from repro.core.approx_matmul import device_constant
     from repro.core.error_metrics import mred_table
     return device_constant(_MRED_RANK_DEV, mred_table)
+
+
+def _error_rank_dev():
+    """Per-config integer error rank: the position of each config when
+    sorting all 32 by (measured MRED, config index).  A total order —
+    unlike the raw MRED table it has no ties, so argmin over gathered
+    ranks is deterministic and breaks MRED ties toward the lower config
+    index, exactly like the engine pool join's lexsort."""
+    from repro.core.approx_matmul import device_constant
+
+    def build():
+        import numpy as np
+        from repro.core.error_metrics import mred_table
+        mred = np.asarray(mred_table())
+        order = np.lexsort((np.arange(mred.shape[0]), mred))
+        rank = np.empty_like(order)
+        rank[order] = np.arange(order.size)
+        return rank.astype(np.int32)
+
+    return device_constant(_ERROR_RANK_DEV, build)
+
+
+def collapse_expert_cfg(config):
+    """(E, g) per-expert-per-group config -> (g,) per-group vector for a
+    GEMM with no expert axis (attention/MLP denses of a MoE model whose
+    engine config carries an expert dimension): per group, the
+    lowest-measured-MRED config across the experts — the same
+    never-exceed-requested-error rule as the engine's pool join and the
+    straddling-block collapse.  Traced-gather only: zero retraces."""
+    cfg = jnp.asarray(config, jnp.int32)
+    assert cfg.ndim == 2, cfg.shape
+    idx = jnp.argmin(_error_rank_dev()[cfg], axis=0)
+    return jnp.take_along_axis(cfg, idx[None, :], axis=0)[0]
 
 
 def _expand_group_vector(config, n_logical: int, bn: int, n_blocks: int):
@@ -118,18 +157,18 @@ def approx_mac(a, b, config=0, *, bm: int = 128, bn: int = 128,
 
 
 @partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def _approx_dense_fused_jit(x, w_q, w_scale, config, *, bm, bn, bk,
-                            interpret):
+def _approx_dense_fused_jit(x, w_q, w_scale, config, x_scale, *, bm, bn,
+                            bk, interpret):
     assert w_q.dtype == jnp.int8
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w_q.shape[-1]
     x2 = x.astype(jnp.float32).reshape((-1, k))
     m_flat = x2.shape[0]
-    # per-tensor dynamic activation scale: the ONE pre-pass the fused
-    # path keeps — a bandwidth-optimal reduction producing a scalar
-    x_scale = compute_scale(x2)
-    w_row = jnp.broadcast_to(
+    # COMBINED dequant scale, rounded once here: the kernel epilogue is
+    # then a single multiply with no association freedom (XLA regroups
+    # (acc*xs)*ws chains; the single-product form is bit-stable)
+    w_row = x_scale * jnp.broadcast_to(
         jnp.asarray(w_scale, jnp.float32).reshape(1, -1), (1, n))
     x2 = _pad_to(_pad_to(x2, bm, 0), bk, 1)
     w2 = _pad_to(_pad_to(w_q, bk, 0), bn, 1)
@@ -159,7 +198,15 @@ def approx_dense_pallas(x, w_q, w_scale=None, config=0, *,
         w_q, w_scale = w_q.values, w_q.scale
     config = jnp.asarray(config, jnp.int32)
     if fused:
-        y = _approx_dense_fused_jit(x, w_q, w_scale, config,
+        # the per-tensor dynamic activation scale (the ONE pre-pass any
+        # dynamic quantization needs) is computed HERE, in the caller's
+        # compilation context, not inside the inner jit: XLA strength-
+        # reduces the constant /127 division differently in compiled
+        # programs vs eager dispatch (reciprocal multiply, 1-ulp off),
+        # so the scale must come from the same context as any reference
+        # path it is compared against
+        x_scale = compute_scale(x.astype(jnp.float32))
+        y = _approx_dense_fused_jit(x, w_q, w_scale, config, x_scale,
                                     bm=bm, bn=bn, bk=bk,
                                     interpret=interpret)
         return y.astype(compute_dtype)
@@ -172,8 +219,90 @@ def approx_dense_pallas(x, w_q, w_scale=None, config=0, *,
     w_scale = jnp.asarray(w_scale, jnp.float32)
     if w_scale.ndim == 1:
         w_scale = w_scale[None, :]
-    return (acc.astype(jnp.float32) * x_qt.scale * w_scale
+    return (acc.astype(jnp.float32) * (x_qt.scale * w_scale)
             ).astype(compute_dtype)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _approx_grouped_fused_jit(x, w_q, w_scale, config, group_rows,
+                              x_scale, *, bm, bn, bk, interpret):
+    assert w_q.dtype == jnp.int8
+    e, m, k = x.shape
+    n = w_q.shape[-1]
+    # auto-shrink blocks to the hardware-granularity-rounded dims: a
+    # per-expert slice smaller than the tile would otherwise pad every
+    # expert's quantize + MAC up to full (bm, bk) tiles — pure waste, on
+    # TPU (DMA + MXU occupancy) and in interpret mode alike.  Results
+    # are tiling-invariant, and bn can only shrink when the GEMM has a
+    # single N-block, so neuron-group semantics are unchanged.
+    bm = min(bm, -(-m // 8) * 8)
+    bk = min(bk, -(-k // 128) * 128)
+    bn = min(bn, -(-n // 128) * 128)
+    x2 = _pad_to(_pad_to(x.astype(jnp.float32), bm, 1), bk, 2)
+    w2 = _pad_to(_pad_to(w_q, bk, 1), bn, 2)
+    # combined dequant scale, rounded once (see _approx_dense_fused_jit)
+    ws = _pad_to(x_scale * jnp.broadcast_to(
+        jnp.asarray(w_scale, jnp.float32).reshape(
+            (e, -1) if jnp.ndim(w_scale) >= 1 else (1, 1)), (e, n)), bn, 1)
+    n_blocks = w2.shape[2] // bn
+    if config.ndim == 2:
+        # per-expert neuron-GROUP vectors: expand each expert's row onto
+        # the block grid with the same conservative lowest-MRED collapse
+        # as the dense path (logical width n, not the padded width;
+        # _expand_group_vector's fast path keeps exact per-block rows)
+        config = jax.vmap(
+            lambda c: _expand_group_vector(c, n, bn, n_blocks))(config)
+    out = approx_mac_grouped_matmul(x2, w2, ws, x_scale, group_rows,
+                                    config, bm=bm, bn=bn, bk=bk,
+                                    interpret=interpret)
+    return out[:, :m, :n]
+
+
+def approx_dense_grouped_pallas(x, w_q, w_scale=None, config=0,
+                                group_rows=None, *,
+                                bm: int = 128, bn: int = 128, bk: int = 256,
+                                interpret: bool = False,
+                                compute_dtype=jnp.bfloat16):
+    """Grouped-expert float-facing op: E approx GEMMs, ONE pallas_call.
+
+    x: (E, M, K) float per-expert activation slices; w_q: stacked
+    (E, K, N) int8 bank (or a bank QTensor with (E, N) per-expert
+    per-column scales — see transformer.quantize_lm_params); config: a
+    scalar, an (E,) per-expert vector, or an (E, g) per-expert
+    neuron-group matrix (g == N-blocks for exact per-block control);
+    group_rows: optional (E,) int32 valid-row counts — rows at index >=
+    group_rows[e] are treated as absent (zeroed in the output, excluded
+    from the shared activation scale), and m-blocks past the count skip
+    their MXU work in-kernel.  Returns (E, M, N) `compute_dtype`,
+    bit-identical (interpret mode) to per-expert approx_dense /
+    approx_dense_pallas calls on the shared per-tensor activation scale.
+
+    `config` and `group_rows` are traced arguments of one jitted
+    wrapper: sweeping per-expert configs or raggedness retraces nothing.
+    """
+    if isinstance(w_q, QTensor):
+        assert w_scale is None
+        w_q, w_scale = w_q.values, w_q.scale
+    e, m, _ = x.shape
+    config = jnp.asarray(config, jnp.int32)
+    x = x.astype(jnp.float32)
+    if group_rows is None:
+        rows = jnp.full((e,), m, jnp.int32)
+    else:
+        # zero rows beyond each expert's valid count BEFORE the shared
+        # abs-max so ragged callers get exactly the ref semantics
+        # (invalid rows contribute nothing, not even to the scale)
+        rows = jnp.asarray(group_rows, jnp.int32)
+        valid = jnp.arange(m)[None, :, None] < rows[:, None, None]
+        x = jnp.where(valid, x, 0.0)
+    # shared per-tensor activation scale, computed in the CALLER's
+    # compilation context (identical to quantize()-ing the whole
+    # dispatch buffer where the comparison path does it — see the note
+    # in approx_dense_pallas on XLA's constant-division rewrite)
+    x_scale = compute_scale(x)
+    y = _approx_grouped_fused_jit(x, w_q, w_scale, config, rows, x_scale,
+                                  bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return y.astype(compute_dtype)
 
 
 DEFAULT_BLOCK_CANDIDATES = (

@@ -1,19 +1,61 @@
-"""Pure-jnp oracle for the approx-MAC kernel.
+"""Pure-jnp oracles for the approx-MAC kernels.
 
-Delegates to repro.core.approx_matmul.approx_matmul_operand — the
-TPU-adaptation semantics (operand truncation, depth split ceil-on-B,
-gate, round-to-nearest for ROUND/COMP modes) are defined exactly once in
-core and reused here, so the kernel is tested against the same function
-the model layers use.
+Delegates to repro.core.approx_matmul — the TPU-adaptation semantics
+(operand truncation, depth split ceil-on-B, gate, round-to-nearest for
+ROUND/COMP modes) are defined exactly once in core and reused here, so
+the kernels are tested against the same functions the model layers use.
+
+``approx_mac_grouped_ref`` is the blocked grouped reference for the
+expert-bank kernel (DESIGN.md §4): a plain Python loop of per-expert
+blocked operand matmuls on the SHARED per-tensor activation scale, with
+per-expert per-column weight scales and ragged valid-row masking — the
+semantics the single-pallas_call grouped kernel must reproduce bit-for-
+bit, composed only from core ops (none of the kernel's own plumbing).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.approx_matmul import approx_matmul_operand
+from repro.core.approx_matmul import (approx_matmul_operand,
+                                      approx_matmul_operand_blocked)
+from repro.core.quantization import quantize
 
 
 def approx_mac_matmul_ref(a, b, config: int = 0):
     """a: (M, K) int8, b: (K, N) int8 -> (M, N) int32."""
     return approx_matmul_operand(a, b, config,
                                  preferred_element_type=jnp.int32)
+
+
+def approx_mac_grouped_ref(x, w_q, w_scale, cfg_blocks, group_rows=None,
+                           block_n: int = 128):
+    """Blocked grouped reference: (E, M, K) f32 x (E, K, N) int8 bank.
+
+    cfg_blocks: (E, n_blocks) config indices — expert e's output columns
+    [i*block_n, (i+1)*block_n) run under cfg_blocks[e][i] (pass
+    n_blocks == 1 rows for uniform per-expert configs).  group_rows:
+    optional (E,) valid-row counts; rows past the count are zeroed and
+    excluded from the shared activation scale.  Returns (E, M, N) f32.
+    """
+    e, m, _ = x.shape
+    x = x.astype(jnp.float32)
+    if group_rows is not None:
+        valid = jnp.arange(m)[None, :, None] \
+            < jnp.asarray(group_rows)[:, None, None]
+        x = jnp.where(valid, x, 0.0)
+    x_qt = quantize(x)                       # ONE shared per-tensor scale
+    w_scale = jnp.asarray(w_scale, jnp.float32)
+    outs = []
+    for i in range(e):
+        n = w_q[i].shape[-1]
+        cfg_row = cfg_blocks[i]
+        if len(cfg_row) == 1:
+            acc = approx_matmul_operand(x_qt.values[i], w_q[i], cfg_row[0])
+        else:
+            acc = approx_matmul_operand_blocked(x_qt.values[i], w_q[i],
+                                                cfg_row, block_n)
+        # combined scale rounded once — the shared rescale convention
+        # (core.approx_matmul.approx_dense)
+        outs.append(acc.astype(jnp.float32)
+                    * (x_qt.scale * w_scale[i][None, :]))
+    return jnp.stack(outs)

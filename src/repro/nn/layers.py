@@ -64,7 +64,10 @@ def dense(x, w, *, approx_cfg: int = 0, quantized: bool = False,
     bn-column block resolution; blocks straddling a group boundary (or
     GEMMs narrower than g blocks) run the lowest-measured-MRED config
     among their groups — never higher error than any covered neuron
-    asked for (DESIGN.md §3).
+    asked for (DESIGN.md §3).  An (E, g) per-EXPERT matrix (an engine
+    config with an expert axis reaching a GEMM that has no expert
+    dimension) collapses the expert axis per group by the same
+    lowest-measured-MRED rule (DESIGN.md §4).
 
     backend: "xla" (operand-truncation ops compiled by XLA) or "pallas"
     (the fused approx-MAC kernel: quantize + truncate + int8 MAC +
@@ -76,7 +79,10 @@ def dense(x, w, *, approx_cfg: int = 0, quantized: bool = False,
     if isinstance(approx_cfg, jax.Array) or approx_cfg > 0 or quantized:
         w_qt = w if isinstance(w, QTensor) else quantize(w, axis=1)
         if backend == "pallas":
-            from repro.kernels.approx_mac.ops import approx_dense_pallas
+            from repro.kernels.approx_mac.ops import (approx_dense_pallas,
+                                                      collapse_expert_cfg)
+            if isinstance(approx_cfg, jax.Array) and approx_cfg.ndim == 2:
+                approx_cfg = collapse_expert_cfg(approx_cfg)
             bm, bn, bk = block_shapes
             y = approx_dense_pallas(x.astype(jnp.float32), w_qt,
                                     config=approx_cfg, interpret=interpret,

@@ -81,6 +81,9 @@ class ModelConfig:
     moe_seq_chunks: int = 1              # sequential MoE sub-chunks (prefill)
     moe_ep: bool = False                 # expert-parallel (E over "model")
                                          # instead of TP on d_ff
+    moe_grouped: bool = True             # pallas backend: ONE grouped
+                                         # kernel over all experts (False =
+                                         # per-expert lax.map A/B path)
     # enc-dec (whisper)
     encoder_decoder: bool = False
     n_enc_layers: int = 0
@@ -364,11 +367,10 @@ def _vmapped_quantize(a, base_ndim: int):
 
     CONTRACT: for stacked inputs the result is a *container* QTensor —
     values (L, ..., C) with scale (L, C) — whose aux `axis` refers to
-    the UNSTACKED per-layer layout (axis = base_ndim - 1), because the
-    only consumers are lax.scan / per-layer slicing, which reduce each
-    leaf back to the per-layer shape where the axis is correct.
-    Dequantizing the stacked container directly is guarded against in
-    QTensor.dequantize (slice a layer out first)."""
+    the UNSTACKED per-layer layout (axis = base_ndim - 1); lax.scan /
+    per-layer slicing / QTensor.take reduce each leaf back to the
+    per-layer shape, and QTensor.dequantize/reshape understand the
+    stacked layout directly (scale.ndim - 1 leading dims are stacked)."""
     f = lambda w: quantize(w, axis=w.ndim - 1)
     for _ in range(a.ndim - base_ndim):
         f = jax.vmap(f)
@@ -385,9 +387,13 @@ def quantize_lm_params(params, cfg: ModelConfig):
     ((d, H*hd) / (H*hd, d)) with per-output-channel scales — exactly the
     arrays the per-call ``quantize(w, axis=1)`` produced, so numerics are
     unchanged.  Dense-MLP mats quantize per-channel in place.  MoE expert
-    tensors and recurrent cells keep per-call quantization (their
-    pipelines quantize activations and weights jointly).  Returns a new
-    params tree; embed/lm_head/norms stay float.
+    mats quantize into stacked (E, in, out) QTensor BANKS with (E, out)
+    per-expert per-output-channel scales — the layout the grouped expert
+    kernel consumes directly (DESIGN.md §4) and bit-identical to
+    ``moe.quantize_expert_bank`` applied per trace, so pre-quantizing
+    kills the per-call expert requantize without changing a bit.  The
+    router and recurrent cells keep per-call quantization.  Returns a
+    new params tree; embed/lm_head/norms stay float.
     """
     def conv_attn(d):
         out = dict(d)
@@ -405,11 +411,15 @@ def quantize_lm_params(params, cfg: ModelConfig):
         return out
 
     def conv_mlp(d):
-        if cfg.n_experts > 0 or not d:
+        if not d:
             return d
         out = dict(d)
         for key in ("w_up", "w_gate", "w_down"):
             if key in d:
+                # expert tensors (E, in, out) vmap into stacked banks
+                # with (E, out) scales; dense mats quantize in place —
+                # same code path, the expert axis is just one more
+                # leading dim
                 out[key] = _vmapped_quantize(d[key], 2)
         return out
 
@@ -488,7 +498,8 @@ def _mlp_apply(p, x, cfg, approx_cfg=0):
                        renormalize=cfg.renormalize, approx_cfg=approx_cfg,
                        seq_chunks=cfg.moe_seq_chunks if s > 1 else 1,
                        unroll_chunks=cfg.unroll_chunks, ep=cfg.moe_ep,
-                       backend=cfg.mac_backend, interpret=cfg.mac_interpret)
+                       backend=cfg.mac_backend, interpret=cfg.mac_interpret,
+                       grouped=cfg.moe_grouped)
         return y.reshape(b, s, d)
     if not p:
         return x
@@ -580,11 +591,12 @@ def _apply_block(p, kind, x, cfg, *, positions, approx_cfg=0, causal=True,
 
 
 def is_per_layer_cfg(approx_cfg) -> bool:
-    """True when approx_cfg is a (n_layers,) per-layer config vector or
-    a (n_layers, n_groups) per-layer-per-N-block config matrix (0-d
-    arrays are uniform scalar configs, not vectors)."""
+    """True when approx_cfg is a (n_layers,) per-layer config vector, a
+    (n_layers, n_groups) per-layer-per-N-block config matrix, or a
+    (n_layers, n_experts, n_groups) per-layer-per-EXPERT config tensor
+    (0-d arrays are uniform scalar configs, not vectors)."""
     if isinstance(approx_cfg, (jax.Array, np.ndarray)):
-        return approx_cfg.ndim in (1, 2)
+        return approx_cfg.ndim in (1, 2, 3)
     return isinstance(approx_cfg, (list, tuple))
 
 
@@ -695,7 +707,11 @@ def forward(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
     """Full-sequence hidden states (B, S_total, d).
 
     approx_cfg: Python int (static), traced int32 scalar (uniform
-    runtime config), or (n_layers,) per-layer config vector."""
+    runtime config), a (n_layers,) per-layer config vector, or —
+    pallas backend — a (n_layers, n_groups) / (n_layers, n_experts,
+    n_groups) matrix (per-layer slices with an expert axis reach MoE
+    experts individually; dense GEMMs collapse the expert axis to the
+    lowest-measured-MRED config, see layers.dense)."""
     from repro.dist.sharding import lsc
     tokens = lsc(tokens, "batch", None)
     x = embed_tokens(params, cfg, tokens)

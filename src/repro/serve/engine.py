@@ -32,6 +32,15 @@ from per-layer vectors to per-layer-per-neuron-group (n_layers,
 cfg_groups) matrices (DESIGN.md §3).  Weights are pre-quantized into
 QTensors ONCE at init (``quantize_weights``), so no decode step
 re-quantizes weights inside the traced graph.
+
+PR 3: ``cfg_experts > 1`` (MoE models) adds an EXPERT axis — configs
+become (n_layers, cfg_experts, cfg_groups) tensors, each expert of each
+MoE layer at its own error config through the grouped expert kernel
+(DESIGN.md §4; MoE expert weights now pre-quantize into stacked QTensor
+banks too).  Dense GEMMs in those layers collapse the expert axis to
+the lowest-measured-MRED config — the pool-join rule — and
+``apply_allocation`` accepts (layer, expert) tuple keys so a controller
+can target single experts.
 """
 from __future__ import annotations
 
@@ -77,10 +86,12 @@ class Request:
 class Engine:
     def __init__(self, params, cfg: T.ModelConfig, *, max_batch: int = 4,
                  max_len: int = 512, approx_cfg=0, seed: int = 0,
-                 cfg_groups: int = 1, quantize_weights: bool = True):
+                 cfg_groups: int = 1, cfg_experts: int = 1,
+                 quantize_weights: bool = True):
         # quantize every dense GEMM weight ONCE at engine init and carry
         # QTensors through the jitted step functions — no decode step
-        # re-quantizes weights inside the traced graph (PR 2)
+        # re-quantizes weights inside the traced graph (PR 2; MoE expert
+        # weights join as stacked banks in PR 3)
         self.params = (T.quantize_lm_params(params, cfg)
                        if quantize_weights else params)
         self.cfg = cfg
@@ -89,11 +100,32 @@ class Engine:
         # cfg_groups > 1 widens the knob to per-layer-per-N-block config
         # matrices (n_layers, cfg_groups): each layer's GEMMs split their
         # output columns into cfg_groups contiguous neuron groups, each
-        # at its own error config (requires cfg.mac_backend == "pallas")
+        # at its own error config (requires cfg.mac_backend == "pallas").
+        # cfg_experts > 1 (MoE models) adds the expert axis in between:
+        # (n_layers, cfg_experts, cfg_groups) — each expert of a MoE
+        # layer at its own config via the grouped expert kernel; dense
+        # GEMMs collapse the expert axis to the lowest-MRED config.
         self.cfg_groups = cfg_groups
-        if cfg_groups > 1:
+        self.cfg_experts = cfg_experts
+        if cfg_groups > 1 or cfg_experts > 1:
             assert cfg.mac_backend == "pallas", \
-                "per-block (cfg_groups>1) configs require mac_backend='pallas'"
+                "per-block/per-expert configs require mac_backend='pallas'"
+        if cfg_experts > 1:
+            assert cfg_experts == cfg.n_experts, (cfg_experts,
+                                                  cfg.n_experts)
+        # share of a MoE layer's MACs executed by the expert GEMMs (the
+        # remainder — attention/router — runs at the expert-COLLAPSED
+        # config): weights the expert axis in the energy integral.
+        # Equal-share-per-expert modeling, like the per-group caveat in
+        # energy_report.
+        if cfg.n_experts > 0:
+            d, h, kv, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim)
+            attn_macs = d * (h + 2 * kv) * hd + h * hd * d
+            moe_macs = 3 * d * cfg.d_ff * max(cfg.top_k, 1)
+            self._moe_mac_frac = moe_macs / (moe_macs + attn_macs)
+        else:
+            self._moe_mac_frac = 0.0
         self.approx_cfg = self._as_layer_vector(
             0 if approx_cfg is None else approx_cfg)
         self.rng = jax.random.PRNGKey(seed)
@@ -131,17 +163,24 @@ class Engine:
     # -- config management ----------------------------------------------
     def _as_layer_vector(self, approx_cfg) -> np.ndarray:
         """Normalize int / sequence / None to the engine's config shape:
-        (n_layers,) when cfg_groups == 1, else (n_layers, cfg_groups)
-        (scalars and per-layer vectors broadcast across the groups).
-        One fixed shape keeps every request/retune on the same compiled
-        executables (zero retraces)."""
+        (n_layers,) when cfg_groups == cfg_experts == 1, (n_layers,
+        cfg_groups) with only neuron groups, (n_layers, cfg_experts,
+        cfg_groups) with an expert axis.  Scalars broadcast everywhere;
+        a per-layer vector broadcasts across experts and groups; a 2-D
+        input with cfg_experts > 1 is per-layer-per-EXPERT (broadcast
+        across the groups).  One fixed shape keeps every request/retune
+        on the same compiled executables (zero retraces)."""
         if approx_cfg is None:
             return self.approx_cfg.copy()
-        shape = ((self.cfg.n_layers,) if self.cfg_groups == 1
-                 else (self.cfg.n_layers, self.cfg_groups))
+        if self.cfg_experts > 1:
+            shape = (self.cfg.n_layers, self.cfg_experts, self.cfg_groups)
+        elif self.cfg_groups > 1:
+            shape = (self.cfg.n_layers, self.cfg_groups)
+        else:
+            shape = (self.cfg.n_layers,)
         vec = np.asarray(approx_cfg, dtype=np.int32)
-        if vec.ndim == 1 and self.cfg_groups > 1:
-            vec = vec[:, None]
+        while 1 <= vec.ndim < len(shape):
+            vec = vec[..., None]
         vec = np.broadcast_to(vec, shape).copy()
         assert ((0 <= vec) & (vec < N_CONFIGS)).all(), vec
         return vec
@@ -155,12 +194,25 @@ class Engine:
 
     def apply_allocation(self, assignment: Mapping[Any, int]):
         """Wire a ``DynamicPowerController.allocate`` result in: keys are
-        layer indices or integer-suffixed names ('layer_<i>'), values are
-        configs; layers missing from the assignment stay at their current
-        config.  Free-form controller layer names must be mapped to
-        indices by the caller — unparseable or out-of-range keys raise."""
+        layer indices, integer-suffixed names ('layer_<i>'), or — with
+        cfg_experts > 1 — (layer, expert) tuples targeting one expert of
+        one MoE layer; values are configs.  Layers/experts missing from
+        the assignment stay at their current config.  Free-form
+        controller layer names must be mapped to indices by the caller —
+        unparseable or out-of-range keys raise."""
         vec = self.approx_cfg.copy()
         for key, c in assignment.items():
+            expert = None
+            if isinstance(key, tuple):
+                if len(key) != 2 or self.cfg_experts <= 1:
+                    raise ValueError(
+                        f"key {key!r}: (layer, expert) tuples need "
+                        f"len == 2 and an engine with cfg_experts > 1")
+                key, expert = key
+                expert = int(expert)
+                if not 0 <= expert < self.cfg_experts:
+                    raise ValueError(f"expert index {expert} out of range "
+                                     f"[0, {self.cfg_experts})")
             if isinstance(key, str):
                 tail = key.rsplit("_", 1)[-1]
                 if not tail.isdigit():
@@ -173,7 +225,10 @@ class Engine:
             if not 0 <= i < self.cfg.n_layers:
                 raise ValueError(f"layer index {i} (from key {key!r}) out "
                                  f"of range [0, {self.cfg.n_layers})")
-            vec[i] = int(c)
+            if expert is None:
+                vec[i] = int(c)
+            else:
+                vec[i, expert] = int(c)
         self.set_approx_cfg(vec)
 
     def _pool_cfg(self) -> np.ndarray:
@@ -206,9 +261,31 @@ class Engine:
             return pool.at[slot].set(row[0])
         self.cache = jax.tree.map(splice, self.cache, row_cache)
 
+    def _energy_pj_mean(self, cfg_vec: np.ndarray) -> float:
+        """Mean modeled per-MAC energy of one executed token under
+        cfg_vec.  Without an expert axis this is the plain mean over
+        (layer, group) cells.  With cfg_experts > 1 only the expert
+        GEMMs run at their own configs — every dense GEMM of the layer
+        executes at the expert-COLLAPSED (lowest-measured-MRED) config
+        (layers.dense / ops.collapse_expert_cfg) — so the expert-axis
+        mean is weighted by the MoE share of MACs and the dense share is
+        charged at the collapsed config."""
+        if cfg_vec.ndim < 3:
+            return float(np.mean(_ENERGY_PJ[cfg_vec]))
+        mred = _mred_table()
+        order = np.lexsort((np.arange(mred.size), mred))
+        rank = np.empty_like(order)
+        rank[order] = np.arange(order.size)
+        idx = np.argmin(rank[cfg_vec], axis=1)           # (L, G)
+        collapsed = np.take_along_axis(
+            cfg_vec, idx[:, None, :], axis=1)[:, 0, :]   # (L, G)
+        f = self._moe_mac_frac
+        return (f * float(np.mean(_ENERGY_PJ[cfg_vec]))
+                + (1.0 - f) * float(np.mean(_ENERGY_PJ[collapsed])))
+
     def _count_energy(self, tokens: int, cfg_vec: np.ndarray):
-        self.mac_energy_pj_per_param += tokens * float(
-            np.mean(_ENERGY_PJ[cfg_vec]))
+        self.mac_energy_pj_per_param += tokens * self._energy_pj_mean(
+            cfg_vec)
         self.exact_energy_pj_per_param += tokens * float(_ENERGY_PJ[0])
 
     def _admit(self):
@@ -291,7 +368,10 @@ class Engine:
         covers an equal share of the layer's MACs.  GEMMs narrower than
         cfg_groups kernel blocks conservatively collapse straddled
         groups to their lowest-MRED config (DESIGN.md §3), so the
-        reported saving is an upper bound on such layers."""
+        reported saving is an upper bound on such layers.  With
+        cfg_experts > 1 the expert axis is weighted by the MoE share of
+        MACs (equal share per expert); the dense share is charged at the
+        expert-collapsed config it actually executes (_energy_pj_mean)."""
         n_params = sum(int(np.prod(p.shape))
                        for p in jax.tree.leaves(self.params))
         macs_per_token = 2.0 * n_params / 2   # ~N MACs/token

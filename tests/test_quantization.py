@@ -88,3 +88,48 @@ def test_qtensor_reshape():
     assert r2.axis == 2 and r2.values.shape == (2, 4, 8)
     with pytest.raises(AssertionError):
         qt2.reshape(4, 16)          # would mix channels across scales
+
+
+def _expert_bank(e=3, k=8, n=16, seed=4):
+    """Stacked (E, K, N) bank with (E, N) per-expert per-channel scales
+    (the quantize_lm_params / moe.quantize_expert_bank layout)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (e, k, n))
+    return w, jax.vmap(lambda m: quantize(m, axis=1))(w)
+
+
+def test_qtensor_stacked_bank_take():
+    import numpy as np
+    w, bank = _expert_bank()
+    assert bank.values.shape == (3, 8, 16) and bank.scale.shape == (3, 16)
+    for i in range(3):
+        one = bank.take(i)
+        ref = quantize(w[i], axis=1)
+        np.testing.assert_array_equal(np.asarray(one.values),
+                                      np.asarray(ref.values))
+        np.testing.assert_array_equal(np.asarray(one.scale),
+                                      np.asarray(ref.scale))
+        assert one.axis == ref.axis
+    # traced index works too (expert banks are gathered in-trace)
+    one = bank.take(jnp.asarray(1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(one.values),
+                                  np.asarray(bank.values[1]))
+
+
+def test_qtensor_stacked_bank_dequantize_and_reshape():
+    import numpy as np
+    import pytest
+    w, bank = _expert_bank()
+    # dequantize understands the stacked layout directly
+    deq = bank.dequantize()
+    ref = jnp.stack([bank.take(i).dequantize() for i in range(3)])
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(ref))
+    # reshape may split/merge middle dims while keeping the stacked
+    # leading axis and the trailing channel axis
+    r = bank.reshape(3, 2, 4, 16)
+    assert r.values.shape == (3, 2, 4, 16) and r.axis == 2
+    np.testing.assert_array_equal(
+        np.asarray(r.dequantize().reshape(3, 8, 16)), np.asarray(deq))
+    with pytest.raises(AssertionError):
+        bank.reshape(3, 16, 8)        # would mix channels across scales
+    with pytest.raises(AssertionError):
+        bank.reshape(24, 16)          # would mix experts across scales

@@ -206,7 +206,9 @@ def test_fused_dense_mixed_block_configs_match_blocked_composition():
                               compute_dtype=jnp.float32)
     x_qt = quantize(X_F)
     acc = approx_matmul_operand_blocked(x_qt.values, w_qt.values, vec, 128)
-    ref = acc.astype(jnp.float32) * x_qt.scale * w_qt.scale[None, :]
+    # combined scale rounded once — the repo-wide rescale convention
+    # (core.approx_matmul.approx_dense)
+    ref = acc.astype(jnp.float32) * (x_qt.scale * w_qt.scale[None, :])
     assert jnp.array_equal(out, ref)
 
 
