@@ -154,6 +154,42 @@ def main():
     print(f"\ngrouped MoE engine (per-expert configs "
           f"{eng_m.approx_cfg[..., 0].tolist()}): {len(done)} requests — "
           f"per-expert retune, still no recompiles")
+
+    # ---- the online power-budget scheduler (PR 4) -----------------------
+    # Everything above retunes the engine BY HAND.  Engine(scheduler=...)
+    # closes the loop: the scheduler consumes a joules/token budget,
+    # shadow-probes decode steps at the exact config (same compiled
+    # executable) to MEASURE token agreement, and retunes the pool every
+    # few ticks with the same greedy core as the offline
+    # DynamicPowerController — self-driving dynamic power control
+    # (DESIGN.md §7; benchmarks/run.py scheduler quantifies convergence
+    # on a trained model).
+    from repro.core.power_model import energy_per_token_pj
+    from repro.serve.scheduler import PowerBudgetScheduler
+    sched = PowerBudgetScheduler(0.0, retune_every=4, probe_every=2)
+    eng_s = Engine(params, cfg, max_batch=3, max_len=64, scheduler=sched)
+    eng_s.rng = jax.random.PRNGKey(0)
+    exact_pj = energy_per_token_pj(np.zeros(cfg.n_layers, np.int32),
+                                   eng_s.macs_per_token)
+    sched.set_budget(0.85 * exact_pj)   # 15% below exact-mode energy
+    warm = None
+    for round_ in range(6):
+        for i, p in enumerate(prompts):
+            eng_s.submit(Request(rid=500 + 10 * round_ + i, prompt=p,
+                                 max_new_tokens=8))
+        eng_s.run()
+        if warm is None:
+            warm = (eng_s._decode._cache_size(),
+                    eng_s._prefill._cache_size())
+    rep = sched.report()
+    assert (eng_s._decode._cache_size(),
+            eng_s._prefill._cache_size()) == warm
+    print(f"\nbudget scheduler: target {sched.budget_pj_per_token/1e3:.1f}"
+          f" nJ/token -> measured {rep['measured_pj_per_token']/1e3:.1f}"
+          f" nJ/token, allocation {rep['assignment']}, "
+          f"{rep['probes']} probes ({rep['agreement']*100:.0f}% agree, "
+          f"{rep['backoffs']} backoffs), {rep['retunes']} retunes — "
+          f"probes and retunes recompiled nothing")
     print("\n(agreement = generated-token match vs the exact engine; "
           "energy = calibrated per-MAC model, DESIGN.md §2)")
 

@@ -18,11 +18,16 @@ to deep networks:
 Sensitivities are additive-first-order estimates; the controller
 re-validates the final assignment end-to-end and backs off (lowers the
 most aggressive layer) until the true degradation fits the budget.
+
+The greedy allocation itself is the pure ``greedy_allocate`` below
+(with ``Candidate``/``step_down_config``), shared with the ONLINE
+``serve.scheduler.PowerBudgetScheduler`` — identical static feedback
+through either path yields the identical assignment (DESIGN.md §7).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Callable, Hashable, Sequence
 
 import numpy as np
 
@@ -52,6 +57,85 @@ class LayerSensitivity:
     config: int
     loss_delta: float
     saving: float
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One (key, config) upgrade option for the shared greedy core.
+
+    `key` is whatever the caller allocates over: a layer name (offline
+    controller) or a (layer[, expert][, group]) index tuple (online
+    scheduler).  `loss_delta` is the estimated quality degradation of
+    running `key` at `config`; `saving` its MAC power saving fraction.
+    """
+    key: Hashable
+    config: int
+    loss_delta: float
+    saving: float
+
+
+def step_down_config(config: int, probe_configs: Sequence[int]) -> int:
+    """Next config in `probe_configs` with strictly lower saving than
+    `config` (0 = exact when none is lower) — ONE notch of backoff, the
+    shared rule for the offline validation loop and the scheduler's
+    online hysteresis (a one-config overshoot costs one notch of
+    saving, never the whole allocation)."""
+    lower = [c for c in probe_configs
+             if MAC_SAVING_FRAC[c] < MAC_SAVING_FRAC[config]]
+    return max(lower, key=lambda c: MAC_SAVING_FRAC[c], default=0)
+
+
+def greedy_allocate(keys: Sequence[Hashable],
+                    candidates: Sequence[Candidate],
+                    loss_budget: float,
+                    *, stop: Callable[[dict, "Candidate | None"],
+                                      bool] | None = None
+                    ) -> tuple[dict, float]:
+    """Shared pure greedy allocation core (offline controller AND online
+    scheduler): starting from all-exact, apply candidate upgrades in
+    descending saving/degradation-ratio order while the cumulative
+    estimated degradation stays within `loss_budget`, optionally
+    stopping early once `stop(assignment, accepted)` holds (the
+    scheduler's energy-budget-met predicate; the offline path passes
+    none and runs the budget dry).  `stop` is called once up front with
+    `accepted=None` and then only after each accepted upgrade with the
+    accepted `Candidate` — the predicate can only change when the
+    assignment does, and the accepted candidate lets the caller update
+    incremental state in O(1).  Re-upgrading a key charges only the
+    degradation *increase* over its current config.  Returns
+    (assignment, spent).
+
+    Deterministic: `sorted` is stable, so equal ratios resolve in
+    candidate order — feeding identical sensitivities through the
+    offline and online paths yields the identical assignment
+    (tests/test_scheduler.py)."""
+    assignment: dict = {k: 0 for k in keys}
+    delta: dict = {}
+    for c in candidates:
+        delta.setdefault((c.key, c.config), c.loss_delta)
+    spent = 0.0
+    order = sorted(candidates,
+                   key=lambda s: s.saving / max(s.loss_delta, 1e-9),
+                   reverse=True)
+    # stop() is a pure function of the assignment, which only changes
+    # on an accepted upgrade — evaluating it once up front and once per
+    # acceptance (instead of per candidate) is semantically identical
+    # and keeps the scheduler's energy predicate off the O(candidates)
+    # path
+    if stop is not None and stop(assignment, None):
+        return assignment, spent
+    for cand in order:
+        cur = assignment[cand.key]
+        if MAC_SAVING_FRAC[cand.config] <= MAC_SAVING_FRAC[cur]:
+            continue
+        cur_delta = 0.0 if cur == 0 else delta.get((cand.key, cur), 0.0)
+        extra = max(cand.loss_delta, 0.0) - max(cur_delta, 0.0)
+        if spent + extra <= loss_budget:
+            assignment[cand.key] = cand.config
+            spent += extra
+            if stop is not None and stop(assignment, cand):
+                break
+    return assignment, spent
 
 
 class DynamicPowerController:
@@ -89,25 +173,15 @@ class DynamicPowerController:
     def allocate(self, loss_budget: float, validate: bool = True
                  ) -> dict[str, int]:
         """Assign configs maximizing total saving s.t. sum(loss_delta) <=
-        budget (greedy by saving/delta ratio), then optionally validate
-        end-to-end and back off the costliest layers."""
+        budget (greedy by saving/delta ratio — the shared
+        ``greedy_allocate`` core the online scheduler also runs), then
+        optionally validate end-to-end and back off the costliest
+        layers."""
         if self.base_loss is None:
             self.calibrate()
-        assignment = {l: 0 for l in self.layers}
-        spent = 0.0
-        # candidate upgrades sorted by efficiency (saving per unit loss)
-        cands = sorted(self.sensitivity,
-                       key=lambda s: s.saving / max(s.loss_delta, 1e-9),
-                       reverse=True)
-        for cand in cands:
-            cur_cfg = assignment[cand.layer]
-            if MAC_SAVING_FRAC[cand.config] <= MAC_SAVING_FRAC[cur_cfg]:
-                continue
-            cur_delta = self._delta(cand.layer, cur_cfg)
-            extra = max(cand.loss_delta, 0.0) - max(cur_delta, 0.0)
-            if spent + extra <= loss_budget:
-                assignment[cand.layer] = cand.config
-                spent += extra
+        cands = [Candidate(s.layer, s.config, s.loss_delta, s.saving)
+                 for s in self.sensitivity]
+        assignment, _ = greedy_allocate(self.layers, cands, loss_budget)
         if validate:
             while (float(self.loss_fn(assignment)) - self.base_loss
                    > loss_budget):
@@ -126,9 +200,7 @@ class DynamicPowerController:
     def _step_down(self, config: int) -> int:
         """Next probe config with strictly lower saving than `config`
         (0 = exact when none is lower)."""
-        lower = [c for c in self.probe_configs
-                 if MAC_SAVING_FRAC[c] < MAC_SAVING_FRAC[config]]
-        return max(lower, key=lambda c: MAC_SAVING_FRAC[c], default=0)
+        return step_down_config(config, self.probe_configs)
 
     def _delta(self, layer: str, config: int) -> float:
         if config == 0:

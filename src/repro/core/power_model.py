@@ -107,6 +107,59 @@ def energy_per_mac_pj(config: int) -> float:
     return MAC_ENERGY_EXACT_PJ * (1.0 - mac_saving(config))
 
 
+# per-config modeled MAC energy as a (32,) table — the vectorized twin of
+# energy_per_mac_pj, shared by the engine integral and the scheduler
+ENERGY_PER_MAC_PJ = MAC_ENERGY_EXACT_PJ * (1.0 - MAC_SAVING_FRAC)
+
+_ERROR_RANK: list[np.ndarray] = []
+
+
+def error_rank() -> np.ndarray:
+    """Total error order over the 32 configs: position when sorting by
+    (measured MRED, config index) — THE tie-break-free ranking behind
+    every conservative config join (engine pool join, expert collapse,
+    scheduler energy state); keeping one definition keeps them from
+    diverging.  Lazy import: error_metrics measures the multiplier
+    tables on first use, and only the join/collapse paths need it."""
+    if not _ERROR_RANK:
+        from .error_metrics import mred_table
+        mred = np.asarray(mred_table())
+        order = np.lexsort((np.arange(mred.size), mred))
+        rank = np.empty_like(order)
+        rank[order] = np.arange(order.size)
+        _ERROR_RANK.append(rank)
+    return _ERROR_RANK[0]
+
+
+def energy_per_token_pj(config, macs_per_token: float = 1.0,
+                        moe_mac_frac: float = 0.0) -> float:
+    """Modeled MAC energy (pJ) of ONE generated token under `config`.
+
+    `config` is anything the engine accepts: a scalar, an (n_layers,)
+    vector, an (n_layers, groups) matrix, or an (n_layers, experts,
+    groups) tensor.  Cells are weighted equally (each covers an equal
+    share of the token's MACs), matching the engine's energy integral.
+
+    With an expert axis (ndim == 3) only the MoE expert GEMMs — a
+    `moe_mac_frac` share of the layer's MACs — run at their own
+    per-expert configs; every dense GEMM executes at the expert-
+    COLLAPSED (lowest-measured-MRED per (layer, group)) config
+    (ops.collapse_expert_cfg), so the dense share is charged at the
+    configs actually executed.  This is the joules/token view both the
+    offline controller and the online `PowerBudgetScheduler` consume.
+    """
+    cfg = np.asarray(config, dtype=np.int64)
+    per_mac = float(np.mean(ENERGY_PER_MAC_PJ[cfg]))
+    if cfg.ndim >= 3 and moe_mac_frac < 1.0:
+        idx = np.argmin(error_rank()[cfg], axis=-2)
+        collapsed = np.take_along_axis(
+            cfg, np.expand_dims(idx, -2), axis=-2)[..., 0, :]
+        per_mac = (moe_mac_frac * per_mac
+                   + (1.0 - moe_mac_frac)
+                   * float(np.mean(ENERGY_PER_MAC_PJ[collapsed])))
+    return macs_per_token * per_mac
+
+
 @dataclass(frozen=True)
 class PowerReport:
     config: int

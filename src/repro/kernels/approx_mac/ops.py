@@ -53,21 +53,17 @@ def _mred_table_dev():
 
 
 def _error_rank_dev():
-    """Per-config integer error rank: the position of each config when
-    sorting all 32 by (measured MRED, config index).  A total order —
-    unlike the raw MRED table it has no ties, so argmin over gathered
-    ranks is deterministic and breaks MRED ties toward the lower config
-    index, exactly like the engine pool join's lexsort."""
+    """Per-config integer error rank (power_model.error_rank — THE
+    shared (measured MRED, config index) total order) as a device
+    constant.  A total order — unlike the raw MRED table it has no
+    ties, so argmin over gathered ranks is deterministic and breaks
+    MRED ties toward the lower config index, exactly like the engine
+    pool join."""
     from repro.core.approx_matmul import device_constant
 
     def build():
-        import numpy as np
-        from repro.core.error_metrics import mred_table
-        mred = np.asarray(mred_table())
-        order = np.lexsort((np.arange(mred.shape[0]), mred))
-        rank = np.empty_like(order)
-        rank[order] = np.arange(order.size)
-        return rank.astype(np.int32)
+        from repro.core.power_model import error_rank
+        return error_rank().astype("int32")
 
     return device_constant(_ERROR_RANK_DEV, build)
 

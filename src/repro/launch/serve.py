@@ -1,11 +1,14 @@
 """Serving launcher: continuous-batching engine with the power knob.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
-      [--requests 8] [--max-batch 4] [--max-new 16] [--approx-cfg 0]
+      [--requests 8] [--max-batch 4] [--max-new 16] [--approx-cfg 0] \
+      [--budget-frac 0.85]
 
 Loads a checkpoint when --ckpt is given, otherwise serves random init
 (useful for shape/throughput validation).  --smoke selects the reduced
-config so the loop runs on CPU.
+config so the loop runs on CPU.  --budget-frac attaches an online
+``PowerBudgetScheduler`` targeting that fraction of the exact-mode
+joules/token (DESIGN.md §7) instead of a fixed --approx-cfg.
 """
 from __future__ import annotations
 
@@ -30,6 +33,9 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--approx-cfg", type=int, default=0)
+    ap.add_argument("--budget-frac", type=float, default=None,
+                    help="attach a PowerBudgetScheduler targeting this "
+                         "fraction of exact-mode joules/token")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -43,8 +49,22 @@ def main():
         params = state["params"]
         print(f"restored checkpoint step {ck.latest_step()}")
 
+    sched = None
+    if args.budget_frac is not None:
+        from repro.serve.scheduler import PowerBudgetScheduler
+        sched = PowerBudgetScheduler(0.0)   # budget set below from the
+        #                                     model's exact-mode pJ/token
     eng = Engine(params, cfg, max_batch=args.max_batch,
-                 max_len=args.max_len, approx_cfg=args.approx_cfg)
+                 max_len=args.max_len, approx_cfg=args.approx_cfg,
+                 scheduler=sched)
+    if sched is not None:
+        from repro.core.power_model import energy_per_token_pj
+        exact_pj = energy_per_token_pj(
+            np.zeros_like(eng.approx_cfg), eng.macs_per_token,
+            eng._moe_mac_frac)
+        sched.set_budget(args.budget_frac * exact_pj)
+        print(f"power-budget scheduler: {args.budget_frac:.2f} x exact = "
+              f"{sched.budget_pj_per_token/1e6:.3f} uJ/token")
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):
@@ -64,6 +84,14 @@ def main():
           f"{rep['modeled_mac_energy_j']*1e3:.2f} mJ "
           f"(exact {rep['exact_mac_energy_j']*1e3:.2f} mJ, "
           f"saving {rep['saving_frac']*100:.2f}%)")
+    if sched is not None:
+        s = sched.report()
+        measured = s["measured_pj_per_token"] or s["modeled_pj_per_token"]
+        print(f"scheduler: {s['retunes']} retunes, {s['probes']} probes "
+              f"(agree {100*(s['agreement'] or 0):.1f}%, "
+              f"{s['backoffs']} backoffs), energy/token "
+              f"{measured/1e6:.3f} uJ vs budget "
+              f"{s['budget_pj_per_token']/1e6:.3f} uJ")
 
 
 if __name__ == "__main__":

@@ -41,24 +41,36 @@ banks too).  Dense GEMMs in those layers collapse the expert axis to
 the lowest-measured-MRED config — the pool-join rule — and
 ``apply_allocation`` accepts (layer, expert) tuple keys so a controller
 can target single experts.
+
+PR 4: ``Engine(scheduler=...)`` closes the power loop ONLINE
+(DESIGN.md §7): a ``serve.scheduler.PowerBudgetScheduler`` hooks into
+every tick — periodic shadow-decode probes re-run the pool's step at
+exact config through the SAME decode executable (zero retraces) to
+measure token agreement, and every K ticks the pool is retuned toward
+a joules/token budget over the full (layer[, expert][, group]) space.
+Time is injected (``Engine(clock=...)``) so request ordering and the
+scheduler's tick timing are deterministic under test; ``energy_log``
+records every charged (kind, tokens, per-MAC-pJ) increment so budget
+accounting is auditable step by step.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Mapping
+from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.approx_multiplier import N_CONFIGS
-from repro.core.power_model import MAC_SAVING_FRAC, energy_per_mac_pj
+from repro.core.power_model import (ENERGY_PER_MAC_PJ, MAC_SAVING_FRAC,
+                                    energy_per_token_pj, error_rank)
 from repro.nn import transformer as T
 from .sampling import sample
 
-_ENERGY_PJ = np.asarray([energy_per_mac_pj(c)
-                         for c in range(N_CONFIGS)])
+_ENERGY_PJ = ENERGY_PER_MAC_PJ
 
 
 def _mred_table() -> np.ndarray:
@@ -66,6 +78,21 @@ def _mred_table() -> np.ndarray:
     (shared per-process table, see core.error_metrics.mred_table)."""
     from repro.core.error_metrics import mred_table
     return mred_table()
+
+
+def pool_join(stack) -> np.ndarray:
+    """Join k config tensors (stacked on axis 0) elementwise at the
+    LOWEST measured MRED, ties broken toward the lower config index —
+    the decode-pool rule (DESIGN.md §5): no participant executes at a
+    higher error than it asked for.  A commutative, associative,
+    idempotent lattice meet over the ``power_model.error_rank`` total
+    order — the ONE definition of that order, shared with the
+    expert-axis collapse (``ops.collapse_expert_cfg``) and the
+    scheduler's energy state (property-tested in
+    tests/test_config_algebra.py)."""
+    stack = np.asarray(stack)
+    idx = np.argmin(error_rank()[stack], axis=0)
+    return np.take_along_axis(stack, idx[None, ...], axis=0)[0]
 
 
 @dataclass
@@ -76,7 +103,10 @@ class Request:
     temperature: float = 0.0
     approx_cfg: Any = None        # None -> engine default; int or
                                   # (n_layers,) per-layer vector
-    submitted_at: float = field(default_factory=time.time)
+    submitted_at: float | None = None   # stamped by Engine.submit from
+                                        # the injected clock (was
+                                        # wall-clock at construction —
+                                        # untestable ordering)
     tokens: list = field(default_factory=list)
     done: bool = False
     first_token_at: float | None = None
@@ -87,7 +117,8 @@ class Engine:
     def __init__(self, params, cfg: T.ModelConfig, *, max_batch: int = 4,
                  max_len: int = 512, approx_cfg=0, seed: int = 0,
                  cfg_groups: int = 1, cfg_experts: int = 1,
-                 quantize_weights: bool = True):
+                 quantize_weights: bool = True, scheduler=None,
+                 clock: Callable[[], float] = time.time):
         # quantize every dense GEMM weight ONCE at engine init and carry
         # QTensors through the jitted step functions — no decode step
         # re-quantizes weights inside the traced graph (PR 2; MoE expert
@@ -128,6 +159,9 @@ class Engine:
             self._moe_mac_frac = 0.0
         self.approx_cfg = self._as_layer_vector(
             0 if approx_cfg is None else approx_cfg)
+        # injected time source: request ordering, TTFT stamps, and the
+        # scheduler's tick timing all read it — deterministic in tests
+        self.clock = clock
         self.rng = jax.random.PRNGKey(seed)
         self.queue: list[Request] = []
         self.slots: list[Request | None] = [None] * max_batch
@@ -143,7 +177,17 @@ class Engine:
         self.n_prefill_tokens = 0
         self.mac_energy_pj_per_param = 0.0   # sum over tokens of E(cfg)
         self.exact_energy_pj_per_param = 0.0
+        self.n_tokens_charged = 0
+        # every energy charge, in order: (kind, tokens, per-MAC pJ at
+        # the executed config) — the report totals are exactly the sum
+        # of these rows while nothing has been evicted
+        # (tests/test_energy_accounting.py).  BOUNDED: the totals live
+        # in the accumulators above, the log is an audit window, so a
+        # long-running engine must not grow it forever.
+        self.energy_log: deque[tuple[str, int, float]] = deque(
+            maxlen=65536)
         self.completed: list[Request] = []
+        self._macs_per_token: float | None = None
 
         cfg_ = cfg
 
@@ -159,6 +203,14 @@ class Engine:
             lambda params, tokens, acfg: T.prefill(params, cfg_, tokens,
                                                    max_len=max_len,
                                                    approx_cfg=acfg))
+
+        # online power-budget scheduler (serve/scheduler.py): hooks into
+        # every tick AFTER the jitted functions exist — its shadow
+        # probes reuse self._decode, so the whole loop adds zero
+        # compiled artifacts (asserted in tests/test_scheduler.py)
+        self.scheduler = scheduler
+        if scheduler is not None:
+            scheduler.attach(self)
 
     # -- config management ----------------------------------------------
     def _as_layer_vector(self, approx_cfg) -> np.ndarray:
@@ -243,13 +295,12 @@ class Engine:
                   for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return self.approx_cfg
-        stack = np.stack(active)            # (k, n_layers[, cfg_groups])
-        # rank by (mred, config index): argmin returns the first minimum
-        order = np.lexsort((stack, _mred_table()[stack]), axis=0)[0]
-        return np.take_along_axis(stack, order[None, ...], axis=0)[0]
+        return pool_join(np.stack(active))  # (k, n_layers[, cfg_groups])
 
     # -- request management --------------------------------------------
     def submit(self, req: Request):
+        if req.submitted_at is None:
+            req.submitted_at = self.clock()
         self.queue.append(req)
 
     def _splice_cache(self, slot: int, row_cache):
@@ -263,30 +314,24 @@ class Engine:
 
     def _energy_pj_mean(self, cfg_vec: np.ndarray) -> float:
         """Mean modeled per-MAC energy of one executed token under
-        cfg_vec.  Without an expert axis this is the plain mean over
-        (layer, group) cells.  With cfg_experts > 1 only the expert
-        GEMMs run at their own configs — every dense GEMM of the layer
-        executes at the expert-COLLAPSED (lowest-measured-MRED) config
+        cfg_vec (power_model.energy_per_token_pj at macs_per_token=1).
+        Without an expert axis this is the plain mean over (layer,
+        group) cells.  With cfg_experts > 1 only the expert GEMMs run
+        at their own configs — every dense GEMM of the layer executes
+        at the expert-COLLAPSED (lowest-measured-MRED) config
         (layers.dense / ops.collapse_expert_cfg) — so the expert-axis
         mean is weighted by the MoE share of MACs and the dense share is
         charged at the collapsed config."""
-        if cfg_vec.ndim < 3:
-            return float(np.mean(_ENERGY_PJ[cfg_vec]))
-        mred = _mred_table()
-        order = np.lexsort((np.arange(mred.size), mred))
-        rank = np.empty_like(order)
-        rank[order] = np.arange(order.size)
-        idx = np.argmin(rank[cfg_vec], axis=1)           # (L, G)
-        collapsed = np.take_along_axis(
-            cfg_vec, idx[:, None, :], axis=1)[:, 0, :]   # (L, G)
-        f = self._moe_mac_frac
-        return (f * float(np.mean(_ENERGY_PJ[cfg_vec]))
-                + (1.0 - f) * float(np.mean(_ENERGY_PJ[collapsed])))
+        return energy_per_token_pj(cfg_vec,
+                                   moe_mac_frac=self._moe_mac_frac)
 
-    def _count_energy(self, tokens: int, cfg_vec: np.ndarray):
-        self.mac_energy_pj_per_param += tokens * self._energy_pj_mean(
-            cfg_vec)
+    def _count_energy(self, tokens: int, cfg_vec: np.ndarray,
+                      kind: str = "decode"):
+        pj = self._energy_pj_mean(cfg_vec)
+        self.mac_energy_pj_per_param += tokens * pj
         self.exact_energy_pj_per_param += tokens * float(_ENERGY_PJ[0])
+        self.n_tokens_charged += tokens
+        self.energy_log.append((kind, tokens, pj))
 
     def _admit(self):
         for slot in range(self.max_batch):
@@ -298,14 +343,14 @@ class Engine:
                 logits, row_cache = self._prefill(self.params, tokens,
                                                   jnp.asarray(req_cfg))
                 self.n_prefill_tokens += tokens.shape[1]
-                self._count_energy(tokens.shape[1], req_cfg)
+                self._count_energy(tokens.shape[1], req_cfg, "prefill")
                 self._splice_cache(slot, row_cache)
                 self.slot_pos[slot] = tokens.shape[1]
                 self.slot_cfg[slot] = req_cfg
                 self.rng, k = jax.random.split(self.rng)
                 first = sample(logits, k, temperature=req.temperature)
                 req.tokens.append(int(first[0]))
-                req.first_token_at = time.time()
+                req.first_token_at = self.clock()
                 self.slots[slot] = req
 
     # -- main loop ------------------------------------------------------
@@ -332,8 +377,29 @@ class Engine:
         self.n_decode_steps += 1
         # one token comes out of every active slot this tick
         self._count_energy(len(active), pool_cfg)
+        if self.scheduler is not None:
+            # shadow probe: `cache` still holds the PRE-step state, so
+            # the scheduler can re-run this exact step at the exact
+            # config through the same executable and score agreement
+            self.scheduler.on_step(self, active, cache, token, logits,
+                                   pool_cfg)
         self.rng, k = jax.random.split(self.rng)
-        nxt = np.asarray(sample(logits, k))
+        # per-slot temperatures (sampling.sample takes one scalar): rows
+        # at temperature t sample categorically from logits/t, rows at
+        # 0 take the argmax — the decode loop used to sample EVERY
+        # slot at temperature 1.0, ignoring Request.temperature (whose
+        # default, 0.0, promises greedy decoding; only the first token
+        # from _admit honored it)
+        temps = np.asarray([r.temperature if r is not None else 0.0
+                            for r in self.slots], np.float32)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        if np.any(temps[active] > 0.0):
+            safe = np.where(temps > 0.0, temps, 1.0).astype(np.float32)
+            drawn = np.asarray(sample(
+                logits / jnp.asarray(safe)[:, None], k))
+            nxt = np.where(temps > 0.0, drawn, greedy)
+        else:
+            nxt = greedy
         for i in active:
             req = self.slots[i]
             req.tokens.append(int(nxt[i]))
@@ -341,9 +407,11 @@ class Engine:
             if (len(req.tokens) >= req.max_new_tokens
                     or self.slot_pos[i] >= self.max_len - 1):
                 req.done = True
-                req.finished_at = time.time()
+                req.finished_at = self.clock()
                 self.completed.append(req)
                 self.slots[i] = None
+        if self.scheduler is not None:
+            self.scheduler.on_tick(self)
         return True
 
     def run(self, max_ticks: int = 10000):
@@ -355,6 +423,17 @@ class Engine:
         return self.completed
 
     # -- paper-knob reporting --------------------------------------------
+    @property
+    def macs_per_token(self) -> float:
+        """~MACs executed per generated token (one multiply-add per
+        active parameter) — the scale factor between the per-MAC energy
+        integral and joules/token (shared with the scheduler)."""
+        if self._macs_per_token is None:
+            n_params = sum(int(np.prod(p.shape))
+                           for p in jax.tree.leaves(self.params))
+            self._macs_per_token = 2.0 * n_params / 2
+        return self._macs_per_token
+
     def energy_report(self) -> dict:
         """Modeled MAC energy of the work executed so far, integrated at
         the configs each prefill/decode actually ran vs exact mode
@@ -372,9 +451,7 @@ class Engine:
         cfg_experts > 1 the expert axis is weighted by the MoE share of
         MACs (equal share per expert); the dense share is charged at the
         expert-collapsed config it actually executes (_energy_pj_mean)."""
-        n_params = sum(int(np.prod(p.shape))
-                       for p in jax.tree.leaves(self.params))
-        macs_per_token = 2.0 * n_params / 2   # ~N MACs/token
+        macs_per_token = self.macs_per_token   # ~N MACs/token
         e_cfg = macs_per_token * self.mac_energy_pj_per_param * 1e-12
         e_exact = macs_per_token * self.exact_energy_pj_per_param * 1e-12
         saving = (1.0 - e_cfg / e_exact if e_exact > 0 else

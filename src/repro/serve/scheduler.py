@@ -1,0 +1,453 @@
+"""Online power-budget scheduler — the paper's dynamic power control
+closed at serve time (DESIGN.md §7).
+
+``PowerBudgetScheduler`` consumes a joules/token budget (in pJ) and
+retunes a live ``Engine``'s error-config pool every ``retune_every``
+ticks over the full allocation space the engine exposes — per layer,
+per expert, per neuron group: one key per cell of the engine's
+(n_layers[, cfg_experts][, cfg_groups]) config tensor.  Allocation is
+the SAME greedy saving/degradation-ratio core the offline
+``DynamicPowerController.allocate`` runs (``core.controller
+.greedy_allocate``) with two online twists:
+
+  * the stop rule is the energy budget: upgrades stop as soon as the
+    modeled joules/token (``power_model.energy_per_token_pj``, the same
+    integral ``Engine.energy_report`` charges — expert-collapsed dense
+    share included) meets the budget, then a refinement pass steps the
+    most-degrading keys back DOWN while the budget still holds, so the
+    pool converges to the budget from below instead of overshooting;
+  * degradation is DRIVEN BY MEASURED FEEDBACK, not the static MRED
+    table: every ``probe_every``-th decode step re-runs the pool's step
+    at the exact config on the pre-step cache — through the SAME
+    compiled decode executable, zero retraces — and scores greedy-token
+    agreement on one sampled slot.  Disagreements update per-(key, cfg)
+    degradation estimates (EWMA, floored at a fraction of the MRED
+    prior so the model is never fully forgotten).
+
+Hysteresis/backoff: ``hysteresis`` consecutive disagreeing probes step
+the OFFENDING key — the one with the highest estimated degradation at
+its current config — down exactly ONE probe config
+(``controller.step_down_config``), pin it there for ``hold_ticks``
+ticks, and charge its estimate with the full disagreement budget.  A
+burst of disagreement costs one notch of saving on one key, never the
+pool (the same one-notch rule as the offline validation backoff).
+Estimates of (key, config) pairs that are not currently executing
+relax toward the MRED prior at ``recover`` per retune (they receive no
+probe signal — this is also what un-bans a backed-off config once its
+hold expires; injected ``sensitivity`` tables relax the same way, pass
+``recover=0`` to pin them).
+
+Shadow probes are measurement, not service traffic: their energy is not
+charged to the budget integral (the modeled overhead is one extra
+decode step per ``probe_every`` ticks).
+
+Usage::
+
+    sched = PowerBudgetScheduler(budget_pj_per_token=0.8 * exact_pj)
+    eng = Engine(params, cfg, scheduler=sched)
+    ... submit/run ...
+    sched.report()   # budget vs measured pJ/token, agreement, history
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.approx_multiplier import N_CONFIGS
+from repro.core.controller import (Candidate, greedy_allocate,
+                                   step_down_config)
+from repro.core.error_metrics import mred_table
+from repro.core.power_model import (ENERGY_PER_MAC_PJ, MAC_SAVING_FRAC,
+                                    energy_per_token_pj, error_rank)
+
+# every non-exact config is an allocation rung by default: the ladder's
+# consecutive saving gaps bound how closely the budget can be tracked
+DEFAULT_LADDER = tuple(range(1, N_CONFIGS))
+
+
+class _EnergyState:
+    """Incremental joules/token evaluator over one config tensor.
+
+    ``trial(key, c)`` — the energy if cell `key` were set to `c` — runs
+    in O(1) (O(E) with an expert axis: only that (layer, group)'s
+    collapse column changes), instead of the O(cells) rebuild
+    ``energy_per_token_pj`` does; planning loops that scan every key
+    per iteration stay linear in the key space.  ``commit`` re-syncs
+    the sums exactly from the tensor (commits are rare — one per
+    accepted upgrade/step-down), so no float drift accumulates and
+    ``energy()`` is bit-identical to ``energy_per_token_pj``."""
+
+    def __init__(self, vec, macs_per_token: float, moe_mac_frac: float):
+        self.macs = float(macs_per_token)
+        self.f = float(moe_mac_frac)
+        self.vec = np.array(vec, np.int64)
+        self._sync()
+
+    def _sync(self):
+        E = ENERGY_PER_MAC_PJ
+        self.total = float(E[self.vec].sum())
+        if self.vec.ndim >= 3:
+            idx = np.argmin(error_rank()[self.vec], axis=-2)
+            self.collapsed = np.take_along_axis(
+                self.vec, np.expand_dims(idx, -2), axis=-2)[..., 0, :]
+            self.csum = float(E[self.collapsed].sum())
+
+    def _energy(self, total: float, csum: float) -> float:
+        per_mac = total / self.vec.size
+        if self.vec.ndim >= 3:
+            per_mac = (self.f * per_mac
+                       + (1.0 - self.f) * (csum / self.collapsed.size))
+        return self.macs * per_mac
+
+    def energy(self) -> float:
+        return self._energy(self.total, getattr(self, "csum", 0.0))
+
+    def trial(self, key: tuple, c: int) -> float:
+        E = ENERGY_PER_MAC_PJ
+        total = self.total - float(E[self.vec[key]]) + float(E[c])
+        if self.vec.ndim < 3:
+            return self._energy(total, 0.0)
+        l, e_ix, g = key
+        col = self.vec[l, :, g].copy()
+        col[e_ix] = c
+        newc = col[np.argmin(error_rank()[col])]
+        csum = (self.csum - float(E[self.collapsed[l, g]])
+                + float(E[newc]))
+        return self._energy(total, csum)
+
+    def commit(self, key: tuple, c: int):
+        self.vec[key] = c
+        self._sync()
+
+
+class PowerBudgetScheduler:
+    """Budget-aware retuner for ``serve.engine.Engine`` (one engine per
+    scheduler instance; see module docstring for the control law)."""
+
+    def __init__(self, budget_pj_per_token: float, *,
+                 retune_every: int = 8, probe_every: int = 2,
+                 probe_configs=DEFAULT_LADDER,
+                 agreement_target: float = 0.99, hysteresis: int = 3,
+                 hold_ticks: int = 64, ema: float = 0.25,
+                 recover: float = 0.05,
+                 prior_scale: float = 0.05, prior_floor: float = 0.25,
+                 sensitivity: Mapping[tuple, float] | None = None,
+                 seed: int = 0):
+        assert 0 < probe_every and 0 < retune_every
+        self.budget_pj_per_token = float(budget_pj_per_token)
+        self.retune_every = int(retune_every)
+        self.probe_every = int(probe_every)
+        self.probe_configs = [c for c in probe_configs
+                              if 1 <= c < N_CONFIGS]
+        self.agreement_target = float(agreement_target)
+        self.hysteresis = int(hysteresis)
+        self.hold_ticks = int(hold_ticks)
+        self.ema = float(ema)
+        self.recover = float(recover)
+        self.prior_scale = float(prior_scale)
+        self.prior_floor = float(prior_floor)
+        self._rng = np.random.default_rng(seed)
+
+        # allocation space (set by bind/attach)
+        self.engine = None
+        self.shape: tuple | None = None
+        self.keys: list[tuple] = []
+        self.macs_per_token = 1.0
+        self.moe_mac_frac = 0.0
+        self.assignment: dict[tuple, int] = {}
+
+        # online state
+        self.est: dict[tuple, float] = dict(sensitivity or {})
+        self.hold: dict[tuple, tuple[int, int]] = {}  # key -> (cap, expiry)
+        self.tick = 0
+        self.n_probes = 0
+        self.n_agree = 0
+        self._win_probes = 0
+        self._win_agree = 0
+        self._streak = 0
+        self.n_backoffs = 0
+        self._mark = (0.0, 0)          # (pj_per_param, tokens) at last retune
+        # bounded audit window (one entry per retune/backoff): the
+        # counters above carry the lifetime stats
+        self.history: deque = deque(maxlen=4096)
+
+    # -- binding ---------------------------------------------------------
+    def bind(self, shape, macs_per_token: float = 1.0,
+             moe_mac_frac: float = 0.0, initial=None) -> None:
+        """Fix the allocation space: one key per cell of the engine's
+        config tensor.  Standalone entry point for offline use/tests;
+        ``attach`` wires it to a live engine."""
+        self.shape = tuple(shape)
+        self.keys = [tuple(ix) for ix in np.ndindex(self.shape)]
+        self.macs_per_token = float(macs_per_token)
+        self.moe_mac_frac = float(moe_mac_frac)
+        init = np.zeros(self.shape, np.int32) if initial is None \
+            else np.asarray(initial, np.int32)
+        self.assignment = {k: int(init[k]) for k in self.keys}
+
+    def attach(self, engine) -> None:
+        """Called by ``Engine.__init__`` (``Engine(scheduler=...)``)."""
+        assert self.engine is None, "scheduler already attached"
+        self.engine = engine
+        self.bind(engine.approx_cfg.shape, engine.macs_per_token,
+                  engine._moe_mac_frac, initial=engine.approx_cfg)
+        self._mark = (engine.mac_energy_pj_per_param,
+                      engine.n_tokens_charged)
+
+    # -- degradation model ----------------------------------------------
+    def _prior(self, config: int) -> float:
+        """MRED-proportional prior on one key's disagreement
+        contribution (the offline controller's interpolate-from-the-
+        table fallback, split across keys so the sum over the pool
+        stays comparable to a probability)."""
+        return (self.prior_scale * float(mred_table()[config])
+                / max(len(self.keys), 1))
+
+    def _delta(self, key: tuple, config: int) -> float:
+        if config == 0:
+            return 0.0
+        return self.est.get((key, config), self._prior(config))
+
+    # -- config algebra helpers ------------------------------------------
+    def _tensor(self, assignment: Mapping[tuple, int]) -> np.ndarray:
+        vec = np.zeros(self.shape, np.int32)
+        for k, c in assignment.items():
+            vec[k] = c
+        return vec
+
+    def _energy_pj(self, assignment: Mapping[tuple, int]) -> float:
+        return energy_per_token_pj(self._tensor(assignment),
+                                   self.macs_per_token,
+                                   self.moe_mac_frac)
+
+    def _ladder(self, key: tuple) -> list[int]:
+        """Probe ladder for one key, capped while a backoff hold is
+        active (the key may not climb above its stepped-down config
+        until the hold expires)."""
+        cap = self.hold.get(key)
+        if cap is None:
+            return self.probe_configs
+        top = MAC_SAVING_FRAC[cap[0]]
+        return [c for c in self.probe_configs
+                if MAC_SAVING_FRAC[c] <= top]
+
+    # -- planning --------------------------------------------------------
+    def plan(self) -> dict[tuple, int]:
+        """One full allocation pass over the current feedback state:
+        greedy-by-ratio upgrades until the energy budget is met (or the
+        disagreement budget 1 - agreement_target is spent), then
+        step-down refinement while the budget still holds."""
+        assert self.shape is not None, "bind()/attach() first"
+        budget = self.budget_pj_per_token
+        cands = [Candidate(k, c, self._delta(k, c),
+                           float(MAC_SAVING_FRAC[c]))
+                 for k in self.keys for c in self._ladder(k)]
+        loss_budget = max(1.0 - self.agreement_target, 0.0)
+        # incremental energy state tracks greedy's assignment (all-exact
+        # start; one commit per accepted upgrade, passed by the core)
+        state = _EnergyState(np.zeros(self.shape, np.int64),
+                             self.macs_per_token, self.moe_mac_frac)
+
+        def stop(assignment, accepted):
+            if accepted is not None:
+                state.commit(accepted.key, accepted.config)
+            return state.energy() <= budget
+
+        assignment, _ = greedy_allocate(self.keys, cands, loss_budget,
+                                        stop=stop)
+        # refinement: recover accuracy (and close the gap to the budget
+        # from below) by stepping keys back down one probe config at a
+        # time while the energy stays within budget.  O(1)/O(E) trials
+        # against the incremental state — no per-candidate rebuilds
+        state = _EnergyState(self._tensor(assignment),
+                             self.macs_per_token, self.moe_mac_frac)
+        while True:
+            best = None
+            for k in self.keys:
+                cur = assignment[k]
+                if cur == 0:
+                    continue
+                down = step_down_config(cur, self._ladder(k))
+                if state.trial(k, down) > budget:
+                    continue
+                gain = self._delta(k, cur) - self._delta(k, down)
+                if gain < 0:
+                    continue
+                # most degradation recovered; ties toward the smallest
+                # saving give-up (stay closest to the budget)
+                rank = (gain, -(MAC_SAVING_FRAC[cur]
+                                - MAC_SAVING_FRAC[down]))
+                if best is None or rank > best[0]:
+                    best = (rank, k, down)
+            if best is None:
+                break
+            _, k, down = best
+            prev = assignment[k]
+            state.commit(k, down)
+            if state.energy() > budget:   # ulp-edge guard: a trial may
+                state.commit(k, prev)     # differ from the exact sum in
+                break                     # the last bit
+            assignment[k] = down
+        return assignment
+
+    # -- engine hooks ----------------------------------------------------
+    def on_step(self, engine, active, cache, token, logits,
+                pool_cfg) -> None:
+        """Decode-step hook: every ``probe_every``-th step, shadow-decode
+        the SAME pre-step state at the exact config (same compiled
+        executable — the config is a traced argument) and score greedy-
+        token agreement on one sampled active slot.  An all-exact pool
+        has nothing to measure (the probe would compare exact against
+        exact), so it costs nothing."""
+        if engine.n_decode_steps % self.probe_every:
+            return
+        if not np.any(pool_cfg):
+            return
+        exact = np.zeros_like(pool_cfg)
+        probe_logits, _ = engine._decode(engine.params, cache,
+                                         jnp.asarray(token),
+                                         jnp.asarray(exact))
+        slot = int(self._rng.choice(active))
+        got = int(np.argmax(np.asarray(logits)[slot]))
+        want = int(np.argmax(np.asarray(probe_logits)[slot]))
+        self.record_probe(got == want, pool_cfg)
+
+    def record_probe(self, agree: bool, executed_cfg=None) -> None:
+        """Fold one probe outcome into the feedback state (public so
+        tests — or an external quality signal — can inject outcomes):
+        EWMA-update the degradation estimates of the configs that
+        EXECUTED and run the hysteresis counter; a ``hysteresis``-long
+        disagreement burst triggers a one-notch backoff of the
+        offending key.
+
+        ``executed_cfg`` is the config tensor the probed step actually
+        ran — the POOL config, which pinned requests can hold below the
+        scheduler's assignment.  Feedback lands on those executed
+        (key, config) cells only: an agreement measured at a
+        pinned-down config says nothing about the assignment's (more
+        aggressive) configs, so those estimates are left alone.
+        Defaults to the current assignment (the no-pins case)."""
+        self.n_probes += 1
+        self._win_probes += 1
+        r = 0.0 if agree else 1.0
+        if agree:
+            self.n_agree += 1
+            self._win_agree += 1
+        ran = (self._tensor(self.assignment) if executed_cfg is None
+               else np.asarray(executed_cfg))
+        up = [k for k in self.keys if ran[k] > 0]
+        if up:
+            # split the observation across executed upgraded keys by
+            # their current suspicion share, so sum(est) tracks
+            # P(disagree)
+            d = np.asarray([max(self._delta(k, int(ran[k])), 1e-9)
+                            for k in up])
+            w = d / d.sum()
+            for k, wk in zip(up, w):
+                cfg_k = int(ran[k])
+                cur = self._delta(k, cfg_k)
+                new = (1.0 - self.ema) * cur + self.ema * r * float(wk)
+                # never forget the model entirely: floor at a fraction
+                # of the MRED prior
+                self.est[(k, cfg_k)] = max(
+                    new, self.prior_floor * self._prior(cfg_k))
+        self._streak = 0 if agree else self._streak + 1
+        if self._streak >= self.hysteresis:
+            self._backoff(ran)
+            self._streak = 0
+
+    def _backoff(self, ran: np.ndarray) -> None:
+        """Step the offending key down exactly ONE probe config and hold
+        it there — a disagreement burst never resets the pool.  Only
+        keys whose config actually EXECUTED in the probed steps (and
+        that the scheduler has upgraded) are candidates: disagreement
+        produced solely by pinned requests' own configs is their
+        owners' choice, not the assignment's fault."""
+        up = [k for k in self.keys
+              if ran[k] > 0 and self.assignment.get(k, 0) > 0]
+        if not up:
+            return
+        worst = max(up, key=lambda k: self._delta(k, int(ran[k])))
+        cur = self.assignment[worst]
+        down = step_down_config(cur, self.probe_configs)
+        self.assignment[worst] = down
+        self.hold[worst] = (down, self.tick + self.hold_ticks)
+        # that config has measurably missed the quality bar: charge it
+        # the full disagreement budget so greedy won't re-pick it until
+        # agreeing probes have decayed the estimate back down
+        self.est[(worst, cur)] = max(
+            self._delta(worst, cur), 1.0 - self.agreement_target)
+        self.n_backoffs += 1
+        if self.engine is not None:
+            self.engine.set_approx_cfg(self._tensor(self.assignment))
+        self.history.append({
+            "event": "backoff", "tick": self.tick, "key": worst,
+            "from": int(cur), "to": int(down)})
+
+    def on_tick(self, engine) -> None:
+        """End-of-tick hook: every ``retune_every`` ticks, re-plan from
+        the live feedback and retune the engine (zero retraces — the
+        engine's config is a traced runtime value)."""
+        self.tick += 1
+        for k in [k for k, (_, exp) in self.hold.items()
+                  if exp <= self.tick]:
+            del self.hold[k]
+        if self.tick % self.retune_every:
+            return
+        # estimates of (key, cfg) pairs NOT currently executing get no
+        # probe signal, so they relax toward the MRED prior instead —
+        # without this, a backoff's full-budget penalty would ban that
+        # config forever (probes only ever re-measure the pair once the
+        # config executes again)
+        cur = {(k, self.assignment[k]) for k in self.keys
+               if self.assignment.get(k, 0) > 0}
+        for kk in list(self.est):
+            if kk not in cur:
+                prior = self._prior(kk[1])
+                self.est[kk] += self.recover * (prior - self.est[kk])
+        e1, n1 = engine.mac_energy_pj_per_param, engine.n_tokens_charged
+        e0, n0 = self._mark
+        measured = ((e1 - e0) / (n1 - n0) * self.macs_per_token
+                    if n1 > n0 else None)
+        self._mark = (e1, n1)
+        assignment = self.plan()
+        if assignment != self.assignment:
+            self.assignment = assignment
+            engine.set_approx_cfg(self._tensor(assignment))
+        agree = (self._win_agree / self._win_probes
+                 if self._win_probes else None)
+        self._win_probes = self._win_agree = 0
+        self.history.append({
+            "event": "retune", "tick": self.tick,
+            "time": engine.clock(),
+            "budget_pj_per_token": self.budget_pj_per_token,
+            "modeled_pj_per_token": self._energy_pj(assignment),
+            "measured_pj_per_token": measured,
+            "window_agreement": agree,
+            "assignment": self._tensor(assignment).tolist()})
+
+    # -- reporting -------------------------------------------------------
+    def set_budget(self, budget_pj_per_token: float) -> None:
+        """Retarget the loop live (takes effect at the next retune)."""
+        self.budget_pj_per_token = float(budget_pj_per_token)
+
+    def report(self) -> dict[str, Any]:
+        retunes = [h for h in self.history if h["event"] == "retune"]
+        last = retunes[-1] if retunes else {}
+        return {
+            "budget_pj_per_token": self.budget_pj_per_token,
+            "modeled_pj_per_token": (self._energy_pj(self.assignment)
+                                     if self.shape else None),
+            "measured_pj_per_token": last.get("measured_pj_per_token"),
+            "assignment": (self._tensor(self.assignment).tolist()
+                           if self.shape else None),
+            "probes": self.n_probes,
+            "agreement": (self.n_agree / self.n_probes
+                          if self.n_probes else None),
+            "backoffs": self.n_backoffs,
+            "retunes": len(retunes),
+            "ticks": self.tick,
+        }

@@ -1,0 +1,130 @@
+"""Property tests for the config algebra (PR 4 satellite).
+
+The conservative config join appears three times in the stack — the
+engine's decode-pool join (``engine.pool_join``), the expert-axis
+collapse (``ops.collapse_expert_cfg``), and the kernel's
+straddling-block collapse — all meaning the same thing: elementwise
+meet under the total order (measured MRED, config index).  These laws
+make "never exceed any participant's requested error" composable: the
+pool can join requests in any order, incrementally or at once, and the
+expert collapse commutes with it.
+
+Laws (>= 200 generated cases each, via hypothesis or the deterministic
+tests/_hypothesis_compat.py shim): commutativity, associativity,
+idempotence, never-ranks-above-the-lowest-MRED-input (and membership:
+the join picks one of its inputs), deterministic (mred, index)
+tie-break, and pool_join == collapse_expert_cfg on the expert axis —
+over random (n_layers, E, g) tensors drawn from all 32 configs.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.approx_multiplier import N_CONFIGS
+from repro.core.error_metrics import mred_table
+from repro.kernels.approx_mac.ops import collapse_expert_cfg
+from repro.serve.engine import pool_join
+
+MRED = np.asarray(mred_table())
+# reference total order: position when sorting by (measured MRED, index)
+_ORDER = np.lexsort((np.arange(N_CONFIGS), MRED))
+RANK = np.empty(N_CONFIGS, np.int64)
+RANK[_ORDER] = np.arange(N_CONFIGS)
+
+N_EXAMPLES = 200
+
+
+def _tensors(seed: int, k: int = 3):
+    """k random (L, E, g) config tensors (shared shape) from all 32
+    configs, with occasional duplicated values to exercise ties."""
+    rng = np.random.default_rng(seed)
+    shape = (int(rng.integers(1, 4)), int(rng.integers(1, 5)),
+             int(rng.integers(1, 4)))
+    out = [rng.integers(0, N_CONFIGS, size=shape).astype(np.int32)
+           for _ in range(k)]
+    if rng.random() < 0.3:          # force elementwise ties sometimes
+        out[1] = out[0].copy()
+    return out
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_join_commutative(seed):
+    a, b, _ = _tensors(seed)
+    np.testing.assert_array_equal(pool_join([a, b]), pool_join([b, a]))
+    # the expert collapse is the same meet: expert-permutation invariant
+    rng = np.random.default_rng(seed + 1)
+    x = a[0]                                    # (E, g)
+    perm = rng.permutation(x.shape[0])
+    np.testing.assert_array_equal(np.asarray(collapse_expert_cfg(x)),
+                                  np.asarray(collapse_expert_cfg(x[perm])))
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_join_associative(seed):
+    a, b, c = _tensors(seed)
+    all_at_once = pool_join([a, b, c])
+    left = pool_join([pool_join([a, b]), c])
+    right = pool_join([a, pool_join([b, c])])
+    np.testing.assert_array_equal(all_at_once, left)
+    np.testing.assert_array_equal(all_at_once, right)
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_join_idempotent(seed):
+    a, _, _ = _tensors(seed)
+    np.testing.assert_array_equal(pool_join([a, a]), a)
+    np.testing.assert_array_equal(pool_join([a]), a)
+    # one-expert collapse is the identity; E identical experts too
+    row = a[:1, 0, :]                           # (1, g)
+    np.testing.assert_array_equal(np.asarray(collapse_expert_cfg(row)),
+                                  row[0])
+    rep = np.repeat(row, 3, axis=0)             # (3, g), all equal
+    np.testing.assert_array_equal(np.asarray(collapse_expert_cfg(rep)),
+                                  row[0])
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_join_never_ranks_above_lowest_mred_input(seed):
+    a, b, c = _tensors(seed)
+    j = pool_join([a, b, c])
+    # elementwise: the join's measured MRED is the minimum...
+    assert (MRED[j] <= np.minimum(MRED[a], np.minimum(MRED[b], MRED[c]))
+            ).all()
+    # ...and the join MEMBERSHIP holds: every cell comes from an input
+    assert ((j == a) | (j == b) | (j == c)).all()
+    # same bound for the expert collapse along its axis
+    x = a[0]                                    # (E, g)
+    col = np.asarray(collapse_expert_cfg(x))
+    assert (MRED[col] <= MRED[x].min(axis=0)).all()
+    assert (col[None, :] == x).any(axis=0).all()
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_join_deterministic_tie_break(seed):
+    a, b, _ = _tensors(seed)
+    j = pool_join([a, b])
+    # fully deterministic closed form: the (mred, index)-lexicographic
+    # argmin — MRED ties resolve toward the LOWER config index
+    np.testing.assert_array_equal(j, np.where(RANK[b] < RANK[a], b, a))
+    # repeated evaluation is stable
+    np.testing.assert_array_equal(j, pool_join([a, b]))
+    # explicit tie: configs 1 and 3 measure the SAME MRED — the join
+    # must pick the lower index
+    assert MRED[1] == MRED[3]
+    t1 = np.full_like(a, 3)
+    t2 = np.full_like(a, 1)
+    assert (pool_join([t1, t2]) == 1).all()
+
+
+@settings(max_examples=N_EXAMPLES, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_collapse_expert_cfg_is_pool_join_over_expert_axis(seed):
+    a, _, _ = _tensors(seed)
+    for layer in a:                             # (E, g) per layer
+        np.testing.assert_array_equal(np.asarray(collapse_expert_cfg(layer)),
+                                      pool_join(layer))

@@ -1,0 +1,169 @@
+"""Energy-report accounting invariants (PR 4 satellite).
+
+The engine's energy integral is the quantity the power-budget scheduler
+steers, so its bookkeeping gets first-class coverage (it was previously
+only exercised incidentally through example asserts): per-step charges
+sum exactly to the report totals, the MoE dense share is charged at the
+expert-COLLAPSED config it actually executes, and the reported saving
+fraction is the MAC_SAVING_FRAC composition of the executed configs.
+
+One engine per model is shared across the checks (each Engine instance
+compiles its own prefill/decode pair); per-config assertions work on
+report DELTAS between rounds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.power_model import (ENERGY_PER_MAC_PJ, MAC_SAVING_FRAC,
+                                    energy_per_mac_pj,
+                                    energy_per_token_pj)
+from repro.kernels.approx_mac.ops import collapse_expert_cfg
+from repro.serve.engine import Engine, Request
+
+
+def _small_model():
+    from repro.nn import transformer as T
+    cfg = T.ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                        head_dim=16, d_ff=64, vocab_size=64,
+                        scan_layers=False, remat=False, q_chunk=8,
+                        loss_chunks=1, compute_dtype=jnp.float32)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return T, cfg, params
+
+
+@pytest.fixture(scope="module")
+def dense_engine():
+    T, cfg, params = _small_model()
+    return Engine(params, cfg, max_batch=2, max_len=64)
+
+
+@pytest.fixture(scope="module")
+def moe_engine():
+    from repro.nn import transformer as T
+    cfg = T.ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                        head_dim=16, d_ff=64, vocab_size=64,
+                        n_experts=2, top_k=1, scan_layers=False,
+                        remat=False, q_chunk=8, loss_chunks=1,
+                        compute_dtype=jnp.float32, mac_backend="pallas",
+                        mac_interpret=True)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return Engine(params, cfg, max_batch=2, max_len=32, cfg_experts=2)
+
+
+def _round(eng, rid, approx_cfg):
+    """One request at `approx_cfg`; returns the round's (modeled pJ,
+    exact pJ) per-param charge deltas and the new log rows."""
+    eng.set_approx_cfg(approx_cfg)
+    e0, x0, n0 = (eng.mac_energy_pj_per_param,
+                  eng.exact_energy_pj_per_param, len(eng.energy_log))
+    eng.submit(Request(rid=rid, prompt=np.arange(6) % 64,
+                       max_new_tokens=3))
+    eng.run(max_ticks=20)
+    return (eng.mac_energy_pj_per_param - e0,
+            eng.exact_energy_pj_per_param - x0,
+            list(eng.energy_log)[n0:])
+
+
+# --- dense engine: sums, kinds, saving composition --------------------------
+
+def test_dense_engine_accounting(dense_engine):
+    eng = dense_engine
+    # (a) uniform configs: each round's saving is the table entry
+    for rid, c in enumerate((0, 1, 8, 16, 31)):
+        d_cfg, d_exact, rows = _round(eng, rid, c)
+        assert 1.0 - d_cfg / d_exact == pytest.approx(
+            float(MAC_SAVING_FRAC[c]), rel=1e-6, abs=1e-9), c
+        # every charge of the round ran at the round's config rate
+        for kind, _, pj in rows:
+            assert pj == pytest.approx(float(ENERGY_PER_MAC_PJ[c]),
+                                       rel=1e-12), kind
+
+    # (b) mixed per-layer vector: saving is the energy-mean composition
+    vec = np.asarray([8, 31], np.int32)
+    d_cfg, d_exact, _ = _round(eng, 10, vec)
+    expect = 1.0 - (float(np.mean(ENERGY_PER_MAC_PJ[vec]))
+                    / float(ENERGY_PER_MAC_PJ[0]))
+    assert 1.0 - d_cfg / d_exact == pytest.approx(expect, rel=1e-6)
+
+    # (c) the log IS the integral: per-step rows sum exactly (same-order
+    # float sum) to the lifetime totals, kinds/tokens line up
+    kinds = [k for k, _, _ in eng.energy_log]
+    assert kinds.count("prefill") == 6          # one per request
+    assert kinds.count("decode") == eng.n_decode_steps
+    assert len(kinds) == 6 + eng.n_decode_steps
+    total = sum(t * pj for _, t, pj in eng.energy_log)
+    assert total == pytest.approx(eng.mac_energy_pj_per_param, rel=1e-12)
+    tokens = sum(t for _, t, _ in eng.energy_log)
+    assert tokens == eng.n_tokens_charged
+    assert eng.exact_energy_pj_per_param == pytest.approx(
+        tokens * float(ENERGY_PER_MAC_PJ[0]), rel=1e-12)
+
+    # (d) the report is exactly the scaled integral
+    rep = eng.energy_report()
+    assert rep["modeled_mac_energy_j"] == pytest.approx(
+        eng.macs_per_token * total * 1e-12, rel=1e-12)
+    assert rep["saving_frac"] == pytest.approx(
+        1.0 - eng.mac_energy_pj_per_param / eng.exact_energy_pj_per_param,
+        rel=1e-12)
+
+
+def test_saving_frac_before_any_work_falls_back_to_current_config():
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, max_batch=2, max_len=32, approx_cfg=16)
+    rep = eng.energy_report()               # no jit compile: no work ran
+    assert rep["modeled_mac_energy_j"] == 0.0
+    assert rep["saving_frac"] == pytest.approx(
+        float(MAC_SAVING_FRAC[16]), rel=1e-6)
+
+
+# --- MoE: dense share charged at the expert-collapsed config ----------------
+
+def test_moe_dense_share_charged_at_expert_collapsed_config(moe_engine):
+    eng = moe_engine
+    # cfg 11 has a HIGHER index but LOWER measured MRED than cfg 9 —
+    # the collapse must rank by error, not index
+    cfg_vec = np.asarray([[[9], [11]], [[31], [0]]], np.int32)  # (L, E, G)
+    per_mac = eng._energy_pj_mean(cfg_vec)
+    # independent oracle: dense share at ops.collapse_expert_cfg
+    collapsed = np.stack([np.asarray(collapse_expert_cfg(layer))
+                          for layer in cfg_vec])                # (L, G)
+    np.testing.assert_array_equal(collapsed, [[11], [0]])
+    f = eng._moe_mac_frac
+    expect = (f * float(np.mean(ENERGY_PER_MAC_PJ[cfg_vec]))
+              + (1 - f) * float(np.mean(ENERGY_PER_MAC_PJ[collapsed])))
+    assert 0.0 < f < 1.0
+    assert per_mac == pytest.approx(expect, rel=1e-12)
+    # the collapse MATTERS: the naive all-cells mean would differ
+    assert per_mac != pytest.approx(
+        float(np.mean(ENERGY_PER_MAC_PJ[cfg_vec])), rel=1e-6)
+
+
+def test_moe_engine_charges_energy_log_at_collapsed_rate(moe_engine):
+    eng = moe_engine
+    cfg_vec = np.asarray([[[9], [11]], [[31], [8]]], np.int32)
+    _, _, rows = _round(eng, 0, cfg_vec)
+    rate = eng._energy_pj_mean(cfg_vec)
+    assert rows
+    for kind, tokens, pj in rows:
+        assert pj == pytest.approx(rate, rel=1e-12), kind
+
+
+# --- the shared joules/token view ------------------------------------------
+
+def test_energy_per_token_pj_matches_energy_per_mac():
+    for c in (0, 8, 31):
+        assert energy_per_token_pj(c, 1e6) == pytest.approx(
+            1e6 * energy_per_mac_pj(c), rel=1e-12)
+    # vector view: equal-weighted mean over cells
+    vec = np.asarray([0, 31], np.int32)
+    assert energy_per_token_pj(vec) == pytest.approx(
+        float(np.mean(ENERGY_PER_MAC_PJ[vec])), rel=1e-12)
+
+
+def test_engine_energy_mean_delegates_to_power_model(dense_engine):
+    vec = np.asarray([8, 16], np.int32)
+    assert dense_engine._energy_pj_mean(vec) == pytest.approx(
+        energy_per_token_pj(vec, 1.0, dense_engine._moe_mac_frac),
+        rel=1e-12)
