@@ -444,6 +444,38 @@ def bench_scheduler():
             f"<99% agreement): {bad}")
 
 
+def bench_sharded_decode():
+    """The PR-5 tentpole quantified: the Engine on a TP/SP mesh.
+
+    jax freezes the device topology at backend init, so the measurement
+    body (``benchmarks/sharded_decode.py``) runs in a SUBPROCESS with 8
+    forced host devices — same isolation as tests/test_multidevice.py.
+    The subprocess enforces token bit-identity between the single-host
+    and (2, 4)-mesh engines and a zero-retrace live retune of the
+    replicated config tensor, then writes BENCH_sharded_decode.json
+    (CI artifact); any violation raises here and becomes the harness's
+    ERROR row, which CI greps for.
+    """
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    # preserve inherited platform flags, but OUR device count must win
+    # (a conflicting inherited force-device flag would be ambiguous)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    env["XLA_FLAGS"] = " ".join(
+        flags + ["--xla_force_host_platform_device_count=8"])
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sharded_decode"],
+        capture_output=True, text=True, timeout=560, env=env)
+    sys.stdout.write(r.stdout)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sharded_decode subprocess failed:\n{r.stderr[-2000:]}")
+
+
 def bench_lm_energy_model():
     """The paper's knob projected onto the assigned archs: modeled MAC
     energy per generated token, exact vs cfg31 (DESIGN.md §2)."""
@@ -530,6 +562,7 @@ BENCHES = {
     "pallas_path": bench_pallas_path,
     "moe_path": bench_moe_path,
     "scheduler": bench_scheduler,
+    "sharded_decode": bench_sharded_decode,
     "lm_energy": bench_lm_energy_model,
     "roofline": bench_roofline_table,
     "runtime_config": bench_runtime_config_switch,

@@ -1,0 +1,112 @@
+"""Sharded-serving benchmark body (PR 5, DESIGN.md §8).
+
+Runs INSIDE a subprocess with ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` (jax device topology is frozen at backend init, so the
+parent harness — ``benchmarks/run.py sharded_decode`` — must not force
+devices in its own process).  Serves the demo LM through one Engine
+single-host and once sharded on a (2, 4) data x model mesh, and scores
+
+  * decode throughput (us/tick) and TTFT, single-host vs sharded —
+    forced host devices on CPU: correctness-path timings, the ranking
+    is only meaningful on real multi-device hardware;
+  * token BIT-identity between the two engines (enforced: raise);
+  * a live ``apply_allocation`` retune of the replicated config tensor
+    mid-stream with zero retraces (enforced: raise).
+
+Writes BENCH_sharded_decode.json (CI artifact) and prints the harness's
+``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.sharding import serve_mapping
+    from repro.launch.mesh import make_serve_mesh
+    from repro.nn import transformer as T
+    from repro.serve.engine import Engine, Request
+
+    n_dev = len(jax.devices())
+    assert n_dev == 8, f"expected 8 forced host devices, got {n_dev}"
+    cfg = T.ModelConfig(
+        name="demo-lm", n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=256, vocab_size=256, scan_layers=False,
+        remat=False, q_chunk=32, loss_chunks=1,
+        compute_dtype=jnp.float32)
+    params, specs = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 256, size=8) for _ in range(8)]
+    mixed = np.asarray([0, 8, 16, 31], np.int32)
+
+    def serve(mapping):
+        eng = Engine(params, cfg, max_batch=4, max_len=64,
+                     mapping=mapping, param_specs=specs)
+        eng.rng = jax.random.PRNGKey(0)
+        eng.set_approx_cfg(mixed)
+        for i, p in enumerate(prompts):      # warmup batch: compiles
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=8))
+        warmed_up = eng.run()
+        eng.completed = []   # run() returns the CUMULATIVE list — keep
+        #                      warmup compile time out of the TTFTs
+        warm = (eng._decode._cache_size(), eng._prefill._cache_size())
+        for i, p in enumerate(prompts):      # measured batch
+            eng.submit(Request(rid=100 + i, prompt=p, max_new_tokens=8))
+        t0 = time.perf_counter()
+        steps0 = eng.n_decode_steps
+        done = list(eng.run())
+        eng.completed = []
+        dt = time.perf_counter() - t0
+        us_tick = dt * 1e6 / max(eng.n_decode_steps - steps0, 1)
+        ttft = float(np.median([r.first_token_at - r.submitted_at
+                                for r in done]))
+        # live retune of the replicated config: whole mesh, no retrace
+        eng.apply_allocation({0: 31, 2: 5})
+        for i, p in enumerate(prompts[:4]):
+            eng.submit(Request(rid=200 + i, prompt=p, max_new_tokens=8))
+        done2 = eng.run()
+        now = (eng._decode._cache_size(), eng._prefill._cache_size())
+        if now != warm:
+            raise RuntimeError(f"sharded retune recompiled: {warm}->{now}")
+        toks = [t for r in sorted(warmed_up + done + done2,
+                                  key=lambda r: r.rid)
+                for t in r.tokens]
+        return us_tick, ttft, toks
+
+    us0, ttft0, toks0 = serve(None)
+    mesh = make_serve_mesh(dp=2, tp=4)
+    us1, ttft1, toks1 = serve(serve_mapping(mesh, kv="hd"))
+    if toks1 != toks0:
+        raise RuntimeError("sharded decode is not bit-identical to the "
+                           "single-host path")
+
+    print(f"sharded_decode_single_host,{us0:.1f},"
+          f"ttft_ms={ttft0*1e3:.0f};mode=forced_host_cpu")
+    print(f"sharded_decode_dp2_tp4,{us1:.1f},"
+          f"ttft_ms={ttft1*1e3:.0f};vs_single={us0/us1:.2f}x;"
+          f"bit_identical=True;zero_retraces=True")
+
+    out = {
+        "bench": "sharded_decode",
+        "mode": "forced_host_cpu",   # 8 forced host devices — timings
+        #                              are correctness-path only
+        "mesh": {"data": 2, "model": 4},
+        "model": {"n_layers": 4, "d_model": 64, "vocab": 256},
+        "mixed_cfg": mixed.tolist(),
+        "single_host": {"us_per_tick": us0, "ttft_ms": ttft0 * 1e3},
+        "sharded": {"us_per_tick": us1, "ttft_ms": ttft1 * 1e3},
+        "tokens_bit_identical": True,
+        "zero_retraces_across_retune": True,
+    }
+    with open("BENCH_sharded_decode.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+
+
+if __name__ == "__main__":
+    main()

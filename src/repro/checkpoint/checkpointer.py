@@ -4,7 +4,7 @@ Format: one directory per step containing
   arrays.npz      — flattened pytree leaves as full (unsharded) arrays
   meta.msgpack    — tree structure, step, leaf keys, user metadata
 
-Properties required at 1000-node scale (DESIGN.md §5):
+Properties required at 1000-node scale:
   * atomic: written to ``<dir>.tmp`` then os.rename'd — a crash mid-save
     never corrupts the latest checkpoint;
   * mesh-independent restore: leaves are saved as full arrays

@@ -3,7 +3,7 @@
 Each assigned architecture lives in its own module defining ``CONFIG``
 (exact public-literature configuration) — the registry imports them all.
 Shape cells (train_4k / prefill_32k / decode_32k / long_500k) are defined
-here with the per-arch skip rules from DESIGN.md §4.
+here with the per-arch skip rules below (LONG_CONTEXT_ARCHS).
 """
 from __future__ import annotations
 
@@ -54,7 +54,8 @@ SHAPES = {
     "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
 }
 
-# long_500k runs only for sub-quadratic archs (DESIGN.md §4)
+# long_500k runs only for sub-quadratic archs (quadratic attention
+# at 500k positions would neither fit nor finish)
 LONG_CONTEXT_ARCHS = {"xlstm-350m", "recurrentgemma-2b", "h2o-danube-3-4b",
                       "gemma2-27b"}
 

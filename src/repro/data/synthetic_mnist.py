@@ -6,7 +6,7 @@ generates a deterministic procedural handwritten-digit dataset (vector
 strokes per digit class + random affine jitter + blur + noise) whose
 statistics are MNIST-like (28x28 grayscale in [0,1], 10 classes).  The
 paper's validation target — accuracy deltas across the 32 MAC configs —
-is dataset-instance independent (see DESIGN.md §7), and the loader makes
+is dataset-instance independent, and the loader makes
 the reproduction exact when real MNIST is present.
 
 Feature reduction (paper: 784 -> 62 inputs "for a more hardware-efficient

@@ -156,6 +156,40 @@ def _walk(spec_tree, path):
     return node
 
 
+def serve_mapping(mesh: Mesh, *, kv: str = "hd",
+                  batch_axes: Sequence[str] = ("data",),
+                  fsdp: bool = False) -> Mapping:
+    """Mapping preset for the sharded serving engine (DESIGN.md §8).
+
+    Tensor parallelism always binds ``"tp"``/``"tp?"``/``"vocab"``/
+    ``"expert"`` to the mesh's "model" axis; the ``kv`` argument picks
+    how the decode KV cache is laid out:
+
+      * ``"hd"``  — TP over the cache's head dims: the KV-head count
+        dim ("tp?") takes "model" whenever the TP size divides the
+        KV-head count — attention then stays whole per head and
+        sharded decode is BIT-identical to the single-host path — and
+        ``kv_hd`` (the head_dim) is the fallback axis when it does not
+        (GQA head counts below TP), where the float score contraction
+        reassociates across shards: numerically equivalent, not
+        bit-exact (DESIGN.md §8);
+      * ``"seq"`` — sequence parallelism (``kv_seq`` → "model"): the
+        cache's sequence dim is sharded, the per-step softmax reduces
+        across shards (also allclose, not bit-exact).  Pair it with
+        ``ModelConfig.kv_onehot_write`` so the per-token cache write
+        stays shard-local.
+
+    ``fsdp`` defaults to False for serving: decode wants whole weight
+    shards resident, not zero-3 gathering per step."""
+    if kv == "hd":
+        return Mapping(mesh, fsdp=fsdp, batch_axes=batch_axes,
+                       kv_hd_axis=("model",))
+    if kv == "seq":
+        return Mapping(mesh, fsdp=fsdp, batch_axes=batch_axes,
+                       kv_seq_axis=("model",))
+    raise ValueError(f"kv must be 'hd' or 'seq', got {kv!r}")
+
+
 def train_state_specs(param_specs):
     """Spec tree for ``train.step.init_state`` output: params and the
     (param-shaped) optimizer moments share the param specs; step counters

@@ -34,7 +34,7 @@ from repro.nn import transformer as T
 from repro.train import step as step_lib
 from repro.train.optimizer import adamw
 
-# per-arch microbatch counts for train_4k (activation-memory fit, DESIGN §5)
+# per-arch microbatch counts for train_4k (activation-memory fit)
 MICROBATCHES = {
     "gemma2-27b": 8, "qwen2.5-3b": 4, "h2o-danube-3-4b": 4, "gemma-7b": 4,
     "olmoe-1b-7b": 8, "dbrx-132b": 16, "internvl2-76b": 16,

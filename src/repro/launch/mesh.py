@@ -19,6 +19,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def make_serve_mesh(*, dp: int = 1, tp: int | None = None):
+    """("data", "model") mesh for the sharded serving engine
+    (DESIGN.md §8): `dp` replica groups x `tp` tensor-parallel shards.
+    `tp` defaults to every remaining visible device, so
+    ``make_serve_mesh()`` is "TP over the whole host/pod"."""
+    n = len(jax.devices())
+    if tp is None:
+        if n % dp:
+            raise ValueError(f"dp={dp} does not divide the {n} visible "
+                             f"devices; pass tp explicitly to serve on "
+                             f"a subset")
+        tp = max(n // dp, 1)
+    if dp * tp > n:
+        raise ValueError(f"mesh ({dp}, {tp}) needs {dp * tp} devices, "
+                         f"have {n}")
+    return make_mesh((dp, tp), ("data", "model"))
+
+
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh (e.g. (4,2) on 8 forced host devices).
 

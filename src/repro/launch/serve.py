@@ -2,17 +2,29 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       [--requests 8] [--max-batch 4] [--max-new 16] [--approx-cfg 0] \
-      [--budget-frac 0.85]
+      [--budget-frac 0.85] [--mesh 2x4] [--kv hd|seq]
 
 Loads a checkpoint when --ckpt is given, otherwise serves random init
 (useful for shape/throughput validation).  --smoke selects the reduced
 config so the loop runs on CPU.  --budget-frac attaches an online
 ``PowerBudgetScheduler`` targeting that fraction of the exact-mode
 joules/token (DESIGN.md §7) instead of a fixed --approx-cfg.
+
+--mesh DPxTP serves the model SHARDED (DESIGN.md §8): params placed by
+their logical specs on a ("data", "model") mesh, KV cache sharded along
+heads (--kv hd, bit-identical decode) or sequence (--kv seq, enables
+``kv_onehot_write``), config tensors replicated so every retune — CLI,
+controller, or scheduler — reaches the whole mesh with zero retraces.
+Off-TPU, force host devices first, e.g.:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+      --smoke --mesh 2x4
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -36,12 +48,31 @@ def main():
     ap.add_argument("--budget-frac", type=float, default=None,
                     help="attach a PowerBudgetScheduler targeting this "
                          "fraction of exact-mode joules/token")
+    ap.add_argument("--mesh", default=None, metavar="DPxTP",
+                    help="serve sharded on a (data, model) mesh, e.g. "
+                         "2x4 (needs dp*tp visible devices)")
+    ap.add_argument("--kv", choices=("hd", "seq"), default="hd",
+                    help="sharded KV-cache layout: TP over heads (hd; "
+                         "bit-identical when tp divides the KV-head "
+                         "count, see DESIGN.md §8) or sequence-parallel "
+                         "(seq)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+
+    mapping = None
+    if args.mesh:
+        from repro.dist.sharding import serve_mapping
+        from repro.launch.mesh import make_serve_mesh
+        dp, tp = (int(x) for x in args.mesh.lower().split("x"))
+        if args.kv == "seq":
+            cfg = dataclasses.replace(cfg, kv_onehot_write=True)
+        mapping = serve_mapping(make_serve_mesh(dp=dp, tp=tp), kv=args.kv)
+        print(f"mesh ({dp}, {tp}) over {dp * tp} devices, kv={args.kv}")
+
+    params, specs = T.init_lm(jax.random.PRNGKey(0), cfg)
     if args.ckpt:
         from repro.checkpoint.checkpointer import Checkpointer
         ck = Checkpointer(args.ckpt)
@@ -56,7 +87,7 @@ def main():
         #                                     model's exact-mode pJ/token
     eng = Engine(params, cfg, max_batch=args.max_batch,
                  max_len=args.max_len, approx_cfg=args.approx_cfg,
-                 scheduler=sched)
+                 scheduler=sched, mapping=mapping, param_specs=specs)
     if sched is not None:
         from repro.core.power_model import energy_per_token_pj
         exact_pj = energy_per_token_pj(

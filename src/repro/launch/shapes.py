@@ -3,7 +3,7 @@
 Modality frontends are STUBS per the assignment: whisper gets post-conv
 frame embeddings (B, S_enc, d); internvl2 gets patch embeddings
 (B, 1024, d).  Decoder length for whisper train/prefill cells is
-seq_len // 8 (DESIGN.md §4).
+seq_len // 8 (audio tokens compress ~8x vs text).
 """
 from __future__ import annotations
 

@@ -7,8 +7,8 @@ All recurrences expose two execution paths:
   * decode: O(1)-state single-step updates (the state is the "cache").
 
 The paper's approx-MAC knob applies to the in/out projections of these
-blocks (the recurrent updates themselves are elementwise/diagonal, not
-GEMMs — see DESIGN.md §4 inapplicability notes).
+blocks; the recurrent updates themselves are elementwise/diagonal, not
+GEMMs, so the knob does not reach them (DESIGN.md §2 adapts MACs only).
 """
 from __future__ import annotations
 

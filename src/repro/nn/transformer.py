@@ -377,6 +377,102 @@ def _vmapped_quantize(a, base_ndim: int):
     return f(a)
 
 
+# the MLP/MoE-bank weight names quantize_lm_params converts — shared
+# with the spec transform so the two cannot drift key-by-key
+_QUANT_MLP_KEYS = ("w_up", "w_gate", "w_down")
+
+
+def _map_quantized_nodes(tree, conv_attn, conv_mlp):
+    """The ONE walk over the GEMM-weight nodes the serving path
+    quantizes: 'attn'/'xattn' subtrees through `conv_attn`, 'mlp'
+    subtrees through `conv_mlp`, every other node untouched, rooted at
+    the 'blocks'/'encoder' subtrees.  Both ``quantize_lm_params`` (leaf
+    converter: float array -> QTensor) and ``quantize_lm_specs`` (leaf
+    converter: spec tuple -> QTensor spec node) run THIS walk, so the
+    params tree and its placement-spec tree cannot structurally drift —
+    a converted node in one is a converted node in the other."""
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            if k in ("attn", "xattn"):
+                out[k] = conv_attn(v)
+            elif k == "mlp":
+                out[k] = conv_mlp(v)
+            else:
+                out[k] = walk(v)
+        return out
+
+    new = dict(tree)
+    for key in ("blocks", "encoder"):
+        if key in tree:
+            new[key] = walk(tree[key])
+    return new
+
+
+def _qtensor_spec(values_spec):
+    """Logical-spec node for one QTensor leaf produced by
+    ``_vmapped_quantize``: the node's keys are the CHILD INDICES of
+    ``QTensor.tree_flatten`` — 0 = ``values`` (keeps `values_spec`),
+    1 = ``scale`` (the stacked leading axes plus the out-channel dim:
+    scale shape is ``values.shape[:-2] + (values.shape[-1],)``).
+    ``dist.sharding.Mapping.shardings`` walks pytree paths by key, and a
+    registered pytree node's children are addressed by flattened index,
+    so an int-keyed dict is exactly the addressable spec node."""
+    values_spec = tuple(values_spec)
+    return {0: values_spec, 1: values_spec[:-2] + (values_spec[-1],)}
+
+
+def quantize_lm_specs(specs, cfg: ModelConfig):
+    """Transform an ``init_lm`` logical-spec tree to match the params
+    tree ``quantize_lm_params`` produces, so quantized serving params
+    remain PLACEABLE by logical specs (multi-host sharded serving,
+    DESIGN.md §8).
+
+    The spec transform mirrors the param transform exactly:
+
+      * attention ``wq``/``wk``/``wv`` collapse (d, H, hd) into the 2D
+        GEMM layout (d, H*hd) — the merged output dim inherits the head
+        dim's axis (``"tp?"``: H*hd is divisible by the TP size whenever
+        H is, and the divisibility re-check at mapping time drops it
+        safely when not);
+      * ``wo`` collapses (H, hd, d) into (H*hd, d) the same way;
+      * MLP / MoE-bank mats keep their layout (the expert axis is just a
+        leading stacked dim), so their values spec is unchanged;
+      * every quantized leaf becomes a ``{values, scale}`` QTensor node
+        (``_qtensor_spec``): the per-output-channel scale is sharded
+        like the output dim it scales.
+
+    Leaves ``quantize_lm_params`` leaves float (embed, lm_head, norms,
+    router, recurrent cells, biases) pass through untouched."""
+    def merge(a, b):
+        return a if a is not None else b
+
+    def conv_attn(s):
+        out = dict(s)
+        for key in ("wq", "wk", "wv"):
+            if key in s:
+                t = tuple(s[key])
+                out[key] = _qtensor_spec(t[:-2] + (merge(t[-2], t[-1]),))
+        if "wo" in s:
+            t = tuple(s["wo"])
+            out["wo"] = _qtensor_spec(t[:-3] + (merge(t[-3], t[-2]),
+                                                t[-1]))
+        return out
+
+    def conv_mlp(s):
+        if not s:
+            return s
+        out = dict(s)
+        for key in _QUANT_MLP_KEYS:
+            if key in s:
+                out[key] = _qtensor_spec(s[key])
+        return out
+
+    return _map_quantized_nodes(specs, conv_attn, conv_mlp)
+
+
 def quantize_lm_params(params, cfg: ModelConfig):
     """Pre-quantize every GEMM weight that flows through ``dense`` into
     a QTensor ONCE — the serving engine calls this at init so no decode
@@ -414,7 +510,7 @@ def quantize_lm_params(params, cfg: ModelConfig):
         if not d:
             return d
         out = dict(d)
-        for key in ("w_up", "w_gate", "w_down"):
+        for key in _QUANT_MLP_KEYS:
             if key in d:
                 # expert tensors (E, in, out) vmap into stacked banks
                 # with (E, out) scales; dense mats quantize in place —
@@ -423,24 +519,7 @@ def quantize_lm_params(params, cfg: ModelConfig):
                 out[key] = _vmapped_quantize(d[key], 2)
         return out
 
-    def walk(node):
-        if not isinstance(node, dict):
-            return node
-        out = {}
-        for k, v in node.items():
-            if k in ("attn", "xattn"):
-                out[k] = conv_attn(v)
-            elif k == "mlp":
-                out[k] = conv_mlp(v)
-            else:
-                out[k] = walk(v)
-        return out
-
-    new = dict(params)
-    for key in ("blocks", "encoder"):
-        if key in params:
-            new[key] = walk(params[key])
-    return new
+    return _map_quantized_nodes(params, conv_attn, conv_mlp)
 
 
 # ---------------------------------------------------------------------------

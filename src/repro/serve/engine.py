@@ -52,9 +52,32 @@ Time is injected (``Engine(clock=...)``) so request ordering and the
 scheduler's tick timing are deterministic under test; ``energy_log``
 records every charged (kind, tokens, per-MAC-pJ) increment so budget
 accounting is auditable step by step.
+
+PR 5: ``Engine(mapping=..., param_specs=...)`` serves one TP/SP-SHARDED
+model (DESIGN.md §8): params (incl. the stacked MoE QTensor banks) are
+placed by their logical specs (``dist.sharding.Mapping`` over a
+``launch.mesh`` mesh, specs transformed by
+``transformer.quantize_lm_specs`` to match the quantized layout), the
+KV cache is sharded along ``kv_hd``/``kv_seq``, and every config
+tensor is REPLICATED across the mesh — the decode step runs under the
+activated mapping (GSPMD via ``lsc``/``lsc_tree`` constraints) with
+the config as a traced replicated operand, so ``set_approx_cfg`` /
+``apply_allocation`` / the scheduler retune the WHOLE mesh with zero
+retraces, and — in the heads-TP regime (``serve_mapping(kv="hd")``
+with TP dividing the KV-head count) — the sharded decode is
+bit-identical to the single-host path (int8 MACs accumulate in int32,
+which is exact under any contraction-dim split, and per-head attention
+stays whole on one shard; tests/test_sharded_serving.py).
+
+CONFIG-KEY CONVENTION (used by ``apply_allocation``, the scheduler,
+and the controller alike): a config-tensor cell is addressed by
+``layer`` (int index into the depth axis), then — only when the engine
+has the corresponding axis — ``expert`` (index into ``cfg_experts``)
+and ``group`` (index into ``cfg_groups``), in that order.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -67,6 +90,7 @@ import numpy as np
 from repro.core.approx_multiplier import N_CONFIGS
 from repro.core.power_model import (ENERGY_PER_MAC_PJ, MAC_SAVING_FRAC,
                                     energy_per_token_pj, error_rank)
+from repro.dist.sharding import activate as _activate, lsc_tree
 from repro.nn import transformer as T
 from .sampling import sample
 
@@ -118,7 +142,49 @@ class Engine:
                  max_len: int = 512, approx_cfg=0, seed: int = 0,
                  cfg_groups: int = 1, cfg_experts: int = 1,
                  quantize_weights: bool = True, scheduler=None,
-                 clock: Callable[[], float] = time.time):
+                 clock: Callable[[], float] = time.time,
+                 mapping=None, param_specs=None):
+        """Continuous-batching engine over one compiled prefill + one
+        compiled decode executable.
+
+        Knobs (see the module docstring for the config-key convention):
+
+        max_batch (default 4): decode-pool slots — one batched decode
+            step serves up to this many in-flight requests per tick.
+        max_len (default 512): KV-cache length in tokens (prompt +
+            generated), the static shape of every cache buffer.
+        approx_cfg (default 0 = exact): engine-wide error config; an
+            int broadcasts over the whole config tensor, or pass a
+            per-layer / per-(layer, expert[, group]) array.
+        seed (default 0): sampling PRNG seed.
+        cfg_groups (default 1): neuron groups per layer — widens the
+            config tensor's trailing axis so each layer's GEMM output
+            columns split into `cfg_groups` contiguous groups, each at
+            its own config (requires ``cfg.mac_backend == "pallas"``).
+        cfg_experts (default 1): expert axis (MoE models; must equal
+            ``cfg.n_experts``) — every expert of every MoE layer at its
+            own config through the grouped expert kernel.
+        quantize_weights (default True): pre-quantize every GEMM weight
+            into QTensors once at init (serving mode).  False keeps
+            float params (each call quantizes in-trace — debugging/A-B
+            only).
+        scheduler (default None): a ``serve.scheduler
+            .PowerBudgetScheduler`` to close the power loop online; the
+            engine calls its ``on_step``/``on_tick`` hooks every tick.
+        clock (default time.time): injected time source, read for
+            request ``submitted_at``/TTFT/finish stamps and the
+            scheduler's tick timing — pass a fake for deterministic
+            tests.  Units: seconds (float).
+        mapping (default None = single-host): a ``dist.sharding
+            .Mapping`` (e.g. ``dist.sharding.serve_mapping`` over a
+            ``launch.mesh.make_serve_mesh`` mesh).  Params and KV cache
+            are placed by logical specs, config tensors are replicated,
+            and every jitted call runs under the activated mapping.
+        param_specs (default None): the logical-spec tree ``init_lm``
+            returned for these params; required to shard the params
+            when ``mapping`` is given (without it they replicate, the
+            cache still shards).
+        """
         # quantize every dense GEMM weight ONCE at engine init and carry
         # QTensors through the jitted step functions — no decode step
         # re-quantizes weights inside the traced graph (PR 2; MoE expert
@@ -126,6 +192,22 @@ class Engine:
         self.params = (T.quantize_lm_params(params, cfg)
                        if quantize_weights else params)
         self.cfg = cfg
+        # -- sharded serving (PR 5, DESIGN.md §8): place params by their
+        # logical specs (transformed to the quantized QTensor layout),
+        # shard the KV cache, replicate every config tensor.  All jitted
+        # calls then run under the activated mapping (_ctx), so the lsc
+        # constraints inside the model bake GSPMD shardings into the
+        # (still unique) executables.
+        self.mapping = mapping
+        if mapping is not None:
+            specs = param_specs
+            if specs is not None and quantize_weights:
+                specs = T.quantize_lm_specs(specs, cfg)
+            sh = (mapping.shardings(specs, self.params)
+                  if specs is not None
+                  else jax.tree.map(lambda _: mapping.replicated(),
+                                    self.params))
+            self.params = jax.device_put(self.params, sh)
         self.max_batch = max_batch
         self.max_len = max_len
         # cfg_groups > 1 widens the knob to per-layer-per-N-block config
@@ -171,7 +253,15 @@ class Engine:
         # it; unpinned slots follow the engine config live, so
         # set_approx_cfg retunes in-flight generation at the next tick
         self.slot_pinned = np.zeros(max_batch, dtype=bool)
-        self.cache, _ = T.init_cache(cfg, max_batch, max_len)
+        self.cache, self.cache_spec = T.init_cache(cfg, max_batch, max_len)
+        if mapping is not None:
+            # canonical cache placement: kv_seq/kv_hd shard per the
+            # mapping, batch over the data axis when divisible.  Kept
+            # around (_cache_sh) so host-side cache surgery (_splice_
+            # cache) can re-pin — the decode executable's input sharding
+            # signature must never drift, or "zero retraces" breaks.
+            self._cache_sh = mapping.shardings(self.cache_spec, self.cache)
+            self.cache = jax.device_put(self.cache, self._cache_sh)
         self.slot_pos = np.zeros(max_batch, dtype=np.int64)
         self.n_decode_steps = 0
         self.n_prefill_tokens = 0
@@ -190,13 +280,20 @@ class Engine:
         self._macs_per_token: float | None = None
 
         cfg_ = cfg
+        cache_spec_ = self.cache_spec
 
         # approx_cfg is a TRACED (n_layers,) int32 argument: retuning the
-        # engine or mixing request configs never retraces (PR 1).
+        # engine or mixing request configs never retraces (PR 1).  The
+        # lsc_tree pins are identities without an active mapping; under
+        # one they constrain the cache in AND out to its canonical
+        # sharding, so the decode-feeds-its-own-cache loop is a sharding
+        # fixed point from the very first call (one executable, ever).
         @jax.jit
         def _decode(params, cache, token, acfg):
-            return T.decode_step(params, cfg_, cache, token,
-                                 approx_cfg=acfg)
+            cache = lsc_tree(cache, cache_spec_)
+            logits, new_cache = T.decode_step(params, cfg_, cache, token,
+                                              approx_cfg=acfg)
+            return logits, lsc_tree(new_cache, cache_spec_)
 
         self._decode = _decode
         self._prefill = jax.jit(
@@ -211,6 +308,30 @@ class Engine:
         self.scheduler = scheduler
         if scheduler is not None:
             scheduler.attach(self)
+
+    # -- sharded-serving helpers -----------------------------------------
+    def _ctx(self):
+        """Execution context for one tick: the mapping's mesh + the
+        activated logical-axis mapping (so every ``lsc`` inside the
+        traced functions resolves), or a no-op without one."""
+        if self.mapping is None:
+            return contextlib.nullcontext()
+        es = contextlib.ExitStack()
+        es.enter_context(self.mapping.mesh)
+        es.enter_context(_activate(self.mapping))
+        return es
+
+    def _replicate(self, x):
+        """Device-put a host value as a mesh-REPLICATED committed array
+        (identity placement without a mapping).  Config tensors and
+        token batches go through here: a replicated committed operand
+        keeps the jitted functions' input-sharding signature constant
+        across retunes/requests — the zero-retrace invariant — and is
+        what lets one ``set_approx_cfg`` retune every shard at once."""
+        x = jnp.asarray(x)
+        if self.mapping is None:
+            return x
+        return jax.device_put(x, self.mapping.replicated())
 
     # -- config management ----------------------------------------------
     def _as_layer_vector(self, approx_cfg) -> np.ndarray:
@@ -311,6 +432,11 @@ class Engine:
                 return pool
             return pool.at[slot].set(row[0])
         self.cache = jax.tree.map(splice, self.cache, row_cache)
+        if self.mapping is not None:
+            # re-pin the canonical sharding: the eager splice's output
+            # placement is whatever GSPMD propagated, and a drifting
+            # cache sharding would re-specialize the decode executable
+            self.cache = jax.device_put(self.cache, self._cache_sh)
 
     def _energy_pj_mean(self, cfg_vec: np.ndarray) -> float:
         """Mean modeled per-MAC energy of one executed token under
@@ -339,9 +465,10 @@ class Engine:
                 req = self.queue.pop(0)
                 req_cfg = self._as_layer_vector(req.approx_cfg)
                 self.slot_pinned[slot] = req.approx_cfg is not None
-                tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                tokens = self._replicate(
+                    jnp.asarray(req.prompt, jnp.int32)[None, :])
                 logits, row_cache = self._prefill(self.params, tokens,
-                                                  jnp.asarray(req_cfg))
+                                                  self._replicate(req_cfg))
                 self.n_prefill_tokens += tokens.shape[1]
                 self._count_energy(tokens.shape[1], req_cfg, "prefill")
                 self._splice_cache(slot, row_cache)
@@ -355,7 +482,13 @@ class Engine:
 
     # -- main loop ------------------------------------------------------
     def step(self):
-        """One engine tick: admit requests, one decode step for the pool."""
+        """One engine tick: admit requests, one decode step for the pool.
+        Runs under the sharding mapping's mesh context when one is
+        attached (a no-op single-host otherwise)."""
+        with self._ctx():
+            return self._step()
+
+    def _step(self):
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
@@ -370,10 +503,10 @@ class Engine:
         pos = int(self.slot_pos[active].max())
         pool_cfg = self._pool_cfg()
         cache = dict(self.cache)
-        cache["pos"] = jnp.asarray(pos, jnp.int32)
-        logits, self.cache = self._decode(self.params, cache,
-                                          jnp.asarray(token),
-                                          jnp.asarray(pool_cfg))
+        cache["pos"] = self._replicate(jnp.asarray(pos, jnp.int32))
+        token = self._replicate(token)
+        logits, self.cache = self._decode(self.params, cache, token,
+                                          self._replicate(pool_cfg))
         self.n_decode_steps += 1
         # one token comes out of every active slot this tick
         self._count_energy(len(active), pool_cfg)

@@ -125,7 +125,45 @@ class _EnergyState:
 
 class PowerBudgetScheduler:
     """Budget-aware retuner for ``serve.engine.Engine`` (one engine per
-    scheduler instance; see module docstring for the control law)."""
+    scheduler instance; see module docstring for the control law).
+
+    Knobs (feedback-state keys follow the engine's (layer[, expert][,
+    group]) config-key convention — see serve/engine.py):
+
+    budget_pj_per_token: the energy target, in picojoules per generated
+        token (compare ``power_model.energy_per_token_pj``); retargets
+        live via ``set_budget``.
+    retune_every (ticks, default 8): full re-plan + engine retune
+        cadence, in engine ticks (decode steps with active slots).
+    probe_every (decode steps, default 2): shadow-probe cadence — every
+        N-th decode step is re-run at the exact config to measure token
+        agreement (overhead: 1/N extra decode steps).
+    probe_configs (default 1..31): the allocation ladder — configs the
+        planner may assign and backoff steps down through.
+    agreement_target (fraction, default 0.99): quality floor; 1 - target
+        is the disagreement budget greedy allocation may spend, and a
+        backed-off config's estimate is charged up to it.
+    hysteresis (probes, default 3): consecutive disagreeing probes that
+        trigger a one-notch backoff of the offending key.
+    hold_ticks (ticks, default 64): how long a backed-off key's probe
+        ladder stays capped at its stepped-down config.
+    ema (fraction, default 0.25): probe-feedback EWMA weight on the
+        per-(key, config) degradation estimates.
+    recover (fraction/retune, default 0.05): how fast non-executing
+        estimates relax toward the MRED prior at each retune (0 pins
+        injected sensitivities).
+    prior_scale / prior_floor (defaults 0.05 / 0.25): scale of the
+        MRED-proportional degradation prior, and the floor under decayed
+        estimates as a fraction of that prior.
+    sensitivity: optional {(key, config): degradation} table seeding the
+        estimates (e.g. from an offline calibration run).
+    seed (default 0): probe slot-sampling PRNG seed.
+
+    The scheduler is sharding-agnostic: on an ``Engine(mapping=...)``
+    (DESIGN.md §8) its probes run through the same mesh-compiled decode
+    executable and its retunes write the replicated config tensor, so
+    one scheduler instance retunes every shard at once — zero retraces
+    either way (tests/test_sharded_serving.py)."""
 
     def __init__(self, budget_pj_per_token: float, *,
                  retune_every: int = 8, probe_every: int = 2,
@@ -307,9 +345,11 @@ class PowerBudgetScheduler:
         if not np.any(pool_cfg):
             return
         exact = np.zeros_like(pool_cfg)
+        # _replicate keeps the probe's operand shardings identical to
+        # the serving call's on a sharded engine (same executable)
         probe_logits, _ = engine._decode(engine.params, cache,
                                          jnp.asarray(token),
-                                         jnp.asarray(exact))
+                                         engine._replicate(exact))
         slot = int(self._rng.choice(active))
         got = int(np.argmax(np.asarray(logits)[slot]))
         want = int(np.argmax(np.asarray(probe_logits)[slot]))

@@ -3,7 +3,7 @@ optimizer update, as a single jit-able function over a TrainState pytree.
 
 Microbatching (gradient accumulation via lax.scan) bounds activation
 memory: each microbatch's remat'ed backward runs before the next starts,
-so boundary activations scale with B/num_microbatches (DESIGN.md §5).
+so boundary activations scale with B/num_microbatches.
 Gradients accumulate in f32 with the same sharding as the params (FSDP).
 """
 from __future__ import annotations

@@ -1,9 +1,33 @@
 """Shared test fixtures. NOTE: no XLA_FLAGS here — unit tests must see
 the real single-CPU device; multi-device tests spawn subprocesses."""
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
 import _hypothesis_compat  # noqa: F401  (installs a hypothesis stub when absent)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_forced_devices(code: str, n_devices: int = 8, timeout=560):
+    """Run `code` in a subprocess with `n_devices` forced host CPU
+    devices (jax freezes topology at backend init, so multi-device
+    semantics can never run in the main test process).  XLA_FLAGS is
+    OVERWRITTEN, not appended: the subprocess must be hermetic — an
+    inherited force-device flag would conflict with ours.  Failures
+    propagate via the exit code + stderr."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, \
+        f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
 
 
 @pytest.fixture(scope="session")

@@ -5,23 +5,7 @@ Each test spawns `python -c` with XLA_FLAGS=--xla_force_host_platform_
 device_count=8 and asserts inside the subprocess; failures propagate via
 the exit code + stderr.
 """
-import os
-import subprocess
-import sys
-
-import pytest
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_sub(code: str, timeout=560):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=timeout, env=env)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
-    return r.stdout
+from conftest import run_forced_devices as run_sub
 
 
 PRELUDE = """
