@@ -26,7 +26,7 @@ import numpy as np
 from .approx_multiplier import (CONFIG_TABLE, N_CONFIGS,
                                 OPERAND_PARAM_TABLE, exhaustive_products,
                                 operand_params)
-from .quantization import QTensor, truncate_operand_lsb
+from .quantization import QTensor, expand_left, truncate_operand_lsb
 
 # ---------------------------------------------------------------------------
 # device-resident constant tables
@@ -238,8 +238,8 @@ def approx_dense(x, w_qt: QTensor, config: int, *, method: str = "operand"):
         acc = approx_matmul_lut(x_qt.values, w_qt.values, config)
     else:
         acc = approx_matmul_operand(x_qt.values, w_qt.values, config)
-    w_scale = w_qt.scale if w_qt.axis is None else w_qt.scale[None, :]
-    return acc.astype(jnp.float32) * (x_qt.scale * w_scale)
+    return acc.astype(jnp.float32) * expand_left(
+        x_qt.scale * w_qt.scale, acc.ndim)
 
 
 N_APPROX_CONFIGS = N_CONFIGS

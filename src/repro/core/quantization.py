@@ -28,6 +28,20 @@ import numpy as np
 QMAX = 127
 
 
+def expand_left(v, ndim: int):
+    """Prepend size-1 axes until ``v`` has rank ``ndim`` — the explicit
+    form of numpy's implicit left-padding broadcast.  The tier-1 suite
+    runs under ``jax_numpy_rank_promotion='raise'`` (tests/conftest.py),
+    so every mixed-rank elementwise op must spell its broadcast out; the
+    reshape is metadata-only and the arithmetic (and therefore
+    bit-identity) is unchanged.  Scalars and equal-rank inputs pass
+    through untouched."""
+    v = jnp.asarray(v)
+    if v.ndim == 0 or v.ndim >= ndim:
+        return v
+    return jax.lax.expand_dims(v, tuple(range(ndim - v.ndim)))
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class QTensor:

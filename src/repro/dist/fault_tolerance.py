@@ -82,7 +82,8 @@ def resilient_train_loop(*, train_step, state, data_iter, checkpointer,
                          fail_injector: Callable[[int], None] | None = None,
                          on_metrics: Callable[[int, dict], None] | None = None,
                          monitor: StragglerMonitor | None = None,
-                         preemption: PreemptionHandler | None = None):
+                         preemption: PreemptionHandler | None = None,
+                         clock: Callable[[], float] = time.time):
     """Run ``train_step`` for ``total_steps`` steps with auto-resume.
 
     train_step(state, batch) -> (state, metrics); data_iter(step) -> batch.
@@ -91,6 +92,11 @@ def resilient_train_loop(*, train_step, state, data_iter, checkpointer,
     worker resumes exactly where the label says.  On a step failure the
     loop restores the last checkpoint (or the initial state) and replays;
     more than ``max_retries`` failures re-raises.
+
+    ``clock`` is the injected time source feeding the straggler
+    monitor's per-step durations (same convention as serve.Engine): the
+    default is the wall clock, tests pass a fake for deterministic
+    step-time sequences.
 
     Returns (state, monitor, completed_steps).
     """
@@ -108,7 +114,7 @@ def resilient_train_loop(*, train_step, state, data_iter, checkpointer,
         if preemption is not None and preemption.preempted:
             checkpointer.save(step, state)
             break
-        t0 = time.time()
+        t0 = clock()
         try:
             if fail_injector is not None:
                 fail_injector(step)
@@ -127,7 +133,7 @@ def resilient_train_loop(*, train_step, state, data_iter, checkpointer,
                 step = 0
             continue
         jax.block_until_ready(jax.tree.leaves(state)[0])
-        monitor.record(step, time.time() - t0)
+        monitor.record(step, clock() - t0)
         step += 1
         if on_metrics is not None:
             on_metrics(step, metrics)

@@ -295,7 +295,7 @@ def _grouped_kernel(cfg_ref, rows_ref, xscale_ref, x_ref, b_ref, scale_ref,
 
     @pl.when(pl.program_id(3) == k_steps - 1)
     def _done():
-        o_ref[0] = acc_ref[...].astype(jnp.float32) * scale_ref[0]
+        o_ref[0] = acc_ref[...].astype(jnp.float32) * scale_ref[...]
 
 
 def grouped_config_operand(config, n_experts: int,

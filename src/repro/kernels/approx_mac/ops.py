@@ -29,7 +29,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import QMAX, QTensor, compute_scale
+from repro.core.quantization import (QMAX, QTensor, compute_scale,
+                                     expand_left)
 
 from .approx_mac import (approx_mac_fused_matmul, approx_mac_grouped_matmul,
                          approx_mac_matmul)
@@ -213,9 +214,8 @@ def approx_dense_pallas(x, w_q, w_scale=None, config=0, *,
     acc = approx_mac(x_qt.values, w_q, config, bm=bm, bn=bn, bk=bk,
                      interpret=interpret)
     w_scale = jnp.asarray(w_scale, jnp.float32)
-    if w_scale.ndim == 1:
-        w_scale = w_scale[None, :]
-    return (acc.astype(jnp.float32) * (x_qt.scale * w_scale)
+    return (acc.astype(jnp.float32)
+            * expand_left(x_qt.scale * w_scale, acc.ndim)
             ).astype(compute_dtype)
 
 

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.approx_matmul import approx_dense
-from repro.core.quantization import QTensor, fake_quant, quantize
+from repro.core.quantization import (QTensor, expand_left, fake_quant,
+                                     quantize)
 
 Params = dict[str, Any]
 
@@ -113,7 +114,8 @@ def rmsnorm(x, scale, eps: float = 1e-6, offset: float = 1.0):
     x = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
     y = x * jax.lax.rsqrt(var + eps)
-    return (y * (offset + scale.astype(jnp.float32))).astype(dt)
+    s = offset + scale.astype(jnp.float32)
+    return (y * expand_left(s, y.ndim)).astype(dt)
 
 
 def layernorm(x, scale, bias, eps: float = 1e-5):
@@ -122,7 +124,8 @@ def layernorm(x, scale, bias, eps: float = 1e-5):
     mu = jnp.mean(x, axis=-1, keepdims=True)
     var = jnp.var(x, axis=-1, keepdims=True)
     y = (x - mu) * jax.lax.rsqrt(var + eps)
-    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+    return (y * expand_left(scale.astype(jnp.float32), y.ndim)
+            + expand_left(bias.astype(jnp.float32), y.ndim)).astype(dt)
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +140,8 @@ def apply_rope(x, positions, theta: float = 10000.0):
     """x: (..., S, H, hd); positions: (..., S) int32."""
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)                       # (hd/2,)
-    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    pos = positions[..., :, None, None].astype(jnp.float32)
+    ang = pos * expand_left(freqs, pos.ndim)            # (...,S,1,hd/2)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

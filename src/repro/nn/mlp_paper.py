@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.approx_matmul import approx_matmul_lut, approx_matmul_operand
-from repro.core.quantization import QMAX, quantize_np
+from repro.core.quantization import QMAX, expand_left, quantize_np
 
 N_INPUT, N_HIDDEN, N_OUTPUT = 62, 30, 10
 
@@ -50,8 +50,9 @@ def init_params(rng, n_in: int = N_INPUT, n_hidden: int = N_HIDDEN,
 
 
 def apply_float(params, x):
-    h = jax.nn.relu(x @ params["hidden"]["w"] + params["hidden"]["b"])
-    return h @ params["out"]["w"] + params["out"]["b"]
+    h = jax.nn.relu(x @ params["hidden"]["w"]
+                    + expand_left(params["hidden"]["b"], x.ndim))
+    return h @ params["out"]["w"] + expand_left(params["out"]["b"], h.ndim)
 
 
 # ---------------------------------------------------------------------------
@@ -143,10 +144,12 @@ class QuantizedMLP:
                   else approx_matmul_operand)
         c1, c2 = self._layer_configs(config)
         x_q = jnp.asarray(x_q)
-        acc1 = mm(x_q, jnp.asarray(self.w1), c1) + jnp.asarray(self.b1)
+        acc1 = mm(x_q, jnp.asarray(self.w1), c1) \
+            + expand_left(jnp.asarray(self.b1), x_q.ndim)
         acc1 = jnp.maximum(acc1, 0)                       # ReLU (21-bit domain)
         h = jnp.clip(acc1 >> self.shift1, 0, QMAX).astype(jnp.int8)  # saturate
-        acc2 = mm(h, jnp.asarray(self.w2), c2) + jnp.asarray(self.b2)
+        acc2 = mm(h, jnp.asarray(self.w2), c2) \
+            + expand_left(jnp.asarray(self.b2), h.ndim)
         return acc2
 
     def predict(self, x: np.ndarray, config=0, method: str = "lut"):

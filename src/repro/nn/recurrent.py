@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quantization import expand_left
+
 from .attention import chunked_attention
 from .layers import dense
 
@@ -48,9 +50,12 @@ def rg_lru_scan(params, x, h0=None):
     h_t = a_t*h_{t-1} + sqrt(1-a_t^2)*(i_t*x_t), via associative scan."""
     b, s, w = x.shape
     xf = x.astype(jnp.float32)
-    r = jax.nn.sigmoid(xf @ params["w_a"] + params["b_a"])      # recurrence gate
-    i = jax.nn.sigmoid(xf @ params["w_x"] + params["b_x"])      # input gate
-    log_a = -RG_LRU_C * r * jax.nn.softplus(-params["lam"])     # log sigmoid(lam)^(c r)
+    r = jax.nn.sigmoid(xf @ params["w_a"]
+                       + expand_left(params["b_a"], xf.ndim))   # recurrence gate
+    i = jax.nn.sigmoid(xf @ params["w_x"]
+                       + expand_left(params["b_x"], xf.ndim))   # input gate
+    log_a = -RG_LRU_C * r * expand_left(
+        jax.nn.softplus(-params["lam"]), r.ndim)     # log sigmoid(lam)^(c r)
     a = jnp.exp(log_a)
     gated_x = i * xf
     beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
@@ -71,9 +76,9 @@ def rg_lru_scan(params, x, h0=None):
 def rg_lru_step(params, x_t, h_prev):
     """Single decode step. x_t: (B, W); h_prev: (B, W)."""
     xf = x_t.astype(jnp.float32)
-    r = jax.nn.sigmoid(xf @ params["w_a"] + params["b_a"])
-    i = jax.nn.sigmoid(xf @ params["w_x"] + params["b_x"])
-    log_a = -RG_LRU_C * r * jax.nn.softplus(-params["lam"])
+    r = jax.nn.sigmoid(xf @ params["w_a"] + expand_left(params["b_a"], xf.ndim))
+    i = jax.nn.sigmoid(xf @ params["w_x"] + expand_left(params["b_x"], xf.ndim))
+    log_a = -RG_LRU_C * r * expand_left(jax.nn.softplus(-params["lam"]), r.ndim)
     a = jnp.exp(log_a)
     beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
     h = a * h_prev.astype(jnp.float32) + beta * (i * xf)
@@ -102,15 +107,16 @@ def causal_conv1d(x, w, b):
     """x: (B,S,W); w: (K,W) depthwise causal conv."""
     k = w.shape[0]
     xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
-    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
-    return out + b
+    out = sum(xp[:, i:i + x.shape[1], :] * expand_left(w[i], x.ndim)
+              for i in range(k))
+    return out + expand_left(b, out.ndim)
 
 
 def causal_conv1d_step(x_t, conv_state, w, b):
     """x_t: (B,W); conv_state: (B,K-1,W) past inputs (oldest first)."""
     k = w.shape[0]
     window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,W)
-    out = jnp.einsum("bkw,kw->bw", window, w) + b
+    out = jnp.einsum("bkw,kw->bw", window, w) + expand_left(b, 2)
     return out, window[:, 1:]
 
 
@@ -181,7 +187,8 @@ def mlstm_parallel(params, x, n_heads: int, *, approx_cfg: int = 0,
               **kw).reshape(b, s, nh, hd)
     v = dense(up, params["w_v"], approx_cfg=approx_cfg,
               **kw).reshape(b, s, nh, hd)
-    if_gates = (up.astype(jnp.float32) @ params["w_if"] + params["b_if"])
+    if_gates = (up.astype(jnp.float32) @ params["w_if"]
+                + expand_left(params["b_if"], up.ndim))
     log_i = if_gates[..., :nh]                               # pre-activation
     log_f = jax.nn.log_sigmoid(if_gates[..., nh:])           # (B,S,H)
     log_fcum = jnp.cumsum(log_f, axis=1)
@@ -215,7 +222,8 @@ def mlstm_final_state(params, x, n_heads: int, *, approx_cfg: int = 0,
               **kw).reshape(b, s, nh, hd)
     v = dense(up, params["w_v"], approx_cfg=approx_cfg,
               **kw).reshape(b, s, nh, hd)
-    if_g = (up.astype(jnp.float32) @ params["w_if"] + params["b_if"])
+    if_g = (up.astype(jnp.float32) @ params["w_if"]
+            + expand_left(params["b_if"], up.ndim))
     log_i = if_g[..., :nh]
     log_f = jax.nn.log_sigmoid(if_g[..., nh:])               # (B,S,H)
     log_fcum = jnp.cumsum(log_f, axis=1)
@@ -247,7 +255,8 @@ def mlstm_step(params, x_t, state, n_heads: int, *, approx_cfg: int = 0,
               **kw).reshape(b, nh, hd)
     v = dense(up, params["w_v"], approx_cfg=approx_cfg,
               **kw).reshape(b, nh, hd)
-    if_g = (up.astype(jnp.float32) @ params["w_if"] + params["b_if"])
+    if_g = (up.astype(jnp.float32) @ params["w_if"]
+            + expand_left(params["b_if"], up.ndim))
     log_i = if_g[..., :nh]
     log_f = jax.nn.log_sigmoid(if_g[..., nh:])               # (B,H)
     m_prev, c_prev, n_prev = state["m"], state["C"], state["n"]
@@ -302,7 +311,7 @@ def _slstm_cell(params, wx_t, carry, n_heads: int):
     hh = h.reshape(b_sz, nh, hd)
     rec = jnp.einsum("bnh,nhk->bnk", hh, params["r"])      # (B,nh,4hd)
     rec = rec.reshape(b_sz, nh, 4, hd).transpose(0, 2, 1, 3).reshape(b_sz, 4 * d)
-    pre = wx_t + rec + params["b"]
+    pre = wx_t + rec + expand_left(params["b"], wx_t.ndim)
     i_p, f_p, z_p, o_p = jnp.split(pre, 4, axis=-1)
     log_i = i_p
     log_f = jax.nn.log_sigmoid(f_p)

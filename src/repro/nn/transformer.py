@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantization import QTensor, quantize
+from repro.core.quantization import QTensor, expand_left, quantize
 from .attention import chunked_attention, decode_attention
 from .layers import ACT, dense, dense_init, embed_init, layernorm, rmsnorm, softcap
 from .moe import moe_ffn
@@ -550,7 +550,7 @@ def _proj(x, w, approx_cfg=0, bias=None, cfg=None, heads=None):
                   **_dense_kw(cfg))
     y = y.reshape(x.shape[:-1] + (h, hd))
     if bias is not None:
-        y = y + bias.astype(y.dtype)
+        y = y + expand_left(bias.astype(y.dtype), y.ndim)
     return y
 
 

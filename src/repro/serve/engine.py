@@ -541,6 +541,7 @@ class Engine:
                     or self.slot_pos[i] >= self.max_len - 1):
                 req.done = True
                 req.finished_at = self.clock()
+                # repro-lint: disable=bounded-state — completed holds the run()'s return payload, one entry per submitted request; bounding it would silently drop finished results
                 self.completed.append(req)
                 self.slots[i] = None
         if self.scheduler is not None:

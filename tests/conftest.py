@@ -1,13 +1,26 @@
 """Shared test fixtures. NOTE: no XLA_FLAGS here — unit tests must see
-the real single-CPU device; multi-device tests spawn subprocesses."""
+the real single-CPU device; multi-device tests spawn subprocesses.
+
+Sanitizer mode: the whole suite runs under
+``jax_numpy_rank_promotion='raise'`` — every mixed-rank elementwise op
+in src/ spells its broadcast out explicitly (repro.core.quantization.
+expand_left), so a silent left-padding broadcast is a bug, not a
+convenience.  ``REPRO_DEBUG_NANS=1`` additionally turns on
+``jax_debug_nans`` (opt-in: it disables some fusions and slows the
+suite, so it is not the default)."""
 import os
 import subprocess
 import sys
 
+import jax
 import numpy as np
 import pytest
 
 import _hypothesis_compat  # noqa: F401  (installs a hypothesis stub when absent)
+
+jax.config.update("jax_numpy_rank_promotion", "raise")
+if os.environ.get("REPRO_DEBUG_NANS") == "1":
+    jax.config.update("jax_debug_nans", True)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -23,6 +36,8 @@ def run_forced_devices(code: str, n_devices: int = 8, timeout=560):
     env["XLA_FLAGS"] = \
         f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
+    # subprocesses inherit the suite's strict-broadcast sanitizer
+    env["JAX_NUMPY_RANK_PROMOTION"] = "raise"
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=timeout, env=env)
     assert r.returncode == 0, \

@@ -1,0 +1,12 @@
+# repro-lint: scope=src/repro/serve/fixture.py
+"""BAD: unbounded serving state on the tick path (rule: bounded-state)."""
+from collections import deque
+
+
+class Engine:
+    def __init__(self):
+        self.history = deque()         # no maxlen
+        self.log = []
+
+    def on_tick(self, engine):
+        self.log.append(engine)        # grows forever under serving

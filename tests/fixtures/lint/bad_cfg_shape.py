@@ -1,0 +1,22 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""BAD (historical: traced-cfg-in-shape): the config flowing into a
+shape position or Python control flow retraces per config value and
+shatters the one-executable guarantee (rule: cfg-shape)."""
+import jax.numpy as jnp
+
+
+def f(x, cfg):
+    mask = jnp.zeros((cfg, 4))     # config-dependent shape
+    return x + mask.sum()
+
+
+def g(x, approx_cfg):
+    if approx_cfg > 0:             # Python branch on the traced knob
+        return x * 2.0
+    return x
+
+
+def h(x, config):
+    for _ in range(config):        # unrolls per config value
+        x = x + 1.0
+    return x

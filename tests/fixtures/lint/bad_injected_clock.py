@@ -1,0 +1,16 @@
+# repro-lint: scope=src/repro/serve/fixture.py
+"""BAD (historical: the PR 4 wall-clock default): ambient time reads
+make request ordering and scheduler timing untestable (rule:
+injected-clock)."""
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Request:
+    submitted_at: float = field(default_factory=time.time)
+
+
+def loop():
+    t0 = time.time()
+    return time.monotonic() - t0

@@ -1,0 +1,12 @@
+# repro-lint: scope=src/repro/kernels/fixture.py
+"""BAD: an index_map closing over a kernel-call parameter, and a
+scalar-prefetch ref after a regular ref (rule: pallas-hygiene)."""
+from jax.experimental import pallas as pl
+
+
+def build(n_heads):
+    return pl.BlockSpec((8, 128), lambda i, j: (i, j // n_heads))
+
+
+def _kernel(a_ref, cfg_ref, o_ref, acc_ref):
+    o_ref[...] = a_ref[...]

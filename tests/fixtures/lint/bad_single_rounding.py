@@ -1,0 +1,8 @@
+# repro-lint: scope=src/repro/core/fixture.py
+"""BAD (historical: the PR 3 rescale reassociation): the two-multiply
+dequant chain is regrouped by XLA's simplifier under jit, so
+differently-compiled paths diverge by 1 ulp (rule: single-rounding)."""
+
+
+def rescale(acc, x_scale, w_scale):
+    return (acc * x_scale) * w_scale

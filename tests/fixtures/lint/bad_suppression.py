@@ -1,0 +1,8 @@
+# repro-lint: scope=src/repro/serve/fixture.py
+"""BAD: a suppression without a reason suppresses nothing and is
+itself a finding (rule: suppression)."""
+import time
+
+
+def loop():
+    return time.time()  # repro-lint: disable=injected-clock

@@ -1,0 +1,12 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""BAD: host reads of traced values (rule: trace-safety)."""
+import jax
+
+
+@jax.jit
+def f(x):
+    return float(x) + 1.0          # concretizes the tracer
+
+
+def g(w, config):
+    return w * int(config)         # Python-level read of the error config

@@ -1,0 +1,15 @@
+# repro-lint: scope=src/repro/serve/fixture.py
+"""GOOD: maxlen deques on the tick path; bare lists only off it."""
+from collections import deque
+
+
+class Engine:
+    def __init__(self):
+        self.history = deque(maxlen=4096)
+        self.pending = []
+
+    def on_tick(self, engine):
+        self.history.append(engine)
+
+    def submit(self, req):
+        self.pending.append(req)       # drained by the step loop

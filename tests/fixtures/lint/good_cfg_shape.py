@@ -1,0 +1,22 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""GOOD: config-independent shapes; None-default and isinstance
+dispatch; metadata-only shape reads."""
+import jax
+import jax.numpy as jnp
+
+
+def f(x, cfg):
+    if cfg is None:                        # Python-default dispatch
+        cfg = 0
+    mask = jnp.zeros((x.shape[0], 4))      # shape from the DATA, not cfg
+    return x + mask.sum()
+
+
+def g(x, approx_cfg):
+    if isinstance(approx_cfg, jax.Array) or approx_cfg > 0:
+        return x * 2.0                     # static/traced dual API
+    return x
+
+
+def h(cfg):
+    return jnp.broadcast_to(jnp.asarray(cfg), jnp.shape(cfg))

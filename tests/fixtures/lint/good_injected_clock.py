@@ -1,0 +1,16 @@
+# repro-lint: scope=src/repro/serve/fixture.py
+"""GOOD: the wall clock appears only as the injected default of a
+parameter/field named ``clock``; everything reads the injection."""
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass
+class Engine:
+    clock: Callable[[], float] = field(default=time.time)
+
+
+def loop(clock: Callable[[], float] = time.time):
+    t0 = clock()
+    return clock() - t0

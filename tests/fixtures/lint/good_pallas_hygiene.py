@@ -1,0 +1,13 @@
+# repro-lint: scope=src/repro/kernels/fixture.py
+"""GOOD: index_maps over grid args + shape-derived locals; prefetch
+refs lead the kernel signature."""
+from jax.experimental import pallas as pl
+
+
+def build(x):
+    group = x.shape[0] // 8            # local, derived from shapes
+    return pl.BlockSpec((8, 128), lambda i, j: (i, j // group))
+
+
+def _kernel(cfg_ref, xscale_ref, a_ref, o_ref, acc_ref):
+    o_ref[...] = a_ref[...]

@@ -1,0 +1,6 @@
+# repro-lint: scope=src/repro/core/fixture.py
+"""GOOD: the combined scale is rounded ONCE, then one multiply."""
+
+
+def rescale(acc, x_scale, w_scale):
+    return acc * (x_scale * w_scale)

@@ -1,0 +1,8 @@
+# repro-lint: scope=src/repro/serve/fixture.py
+"""GOOD: a reasoned waiver silences exactly the named rule."""
+import time
+
+
+def loop():
+    # repro-lint: disable=injected-clock — fixture demonstrating a reasoned waiver
+    return time.time()

@@ -1,0 +1,15 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""GOOD: shape-derived conversions and isinstance-guarded static reads."""
+import jax
+
+
+@jax.jit
+def f(x):
+    d = int(x.shape[0])            # static metadata, not a traced value
+    return x * d
+
+
+def g(w, config):
+    if isinstance(config, jax.Array):
+        return w                   # traced branch never reads the value
+    return w * int(config)         # static branch: config is a Python int

@@ -77,6 +77,46 @@ def test_too_many_failures_raises(tmp_path):
             fail_injector=always_fail)
 
 
+class FakeClock:
+    """Deterministic injected clock: each call returns the next scripted
+    instant.  Two calls bracket each loop step, so step s takes
+    ``durations[s]`` seconds exactly — no wall-clock flakiness."""
+
+    def __init__(self, durations):
+        self.times = []
+        t = 0.0
+        for d in durations:
+            self.times += [t, t + d]
+            t += d
+        self.i = 0
+
+    def __call__(self):
+        t = self.times[self.i]
+        self.i += 1
+        return t
+
+
+def test_loop_straggler_detection_is_deterministic(tmp_path):
+    """The loop's step timing comes from the injected clock, so the
+    monitor's EWMA and flags are reproducible byte-for-byte."""
+    durations = [1.0] * 10
+    durations[7] = 9.0                      # the scripted straggler
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": jnp.zeros(()), "count": jnp.zeros((), jnp.int32)}
+    flagged = []
+    monitor = StragglerMonitor(threshold=2.0, warmup_steps=2)
+    orig_record = monitor.record
+    monitor.record = lambda step, sec: orig_record(
+        step, sec, on_straggler=lambda s, t: flagged.append((s, t)))
+    _, m, last = resilient_train_loop(
+        train_step=toy_step, state=state, data_iter=data, checkpointer=ck,
+        total_steps=10, checkpoint_every=100, monitor=monitor,
+        clock=FakeClock(durations))
+    assert last == 10
+    assert flagged == [(7, 9.0)]
+    assert m.ewma == pytest.approx(1.0)     # outlier not folded in
+
+
 def test_straggler_monitor_flags_outliers():
     m = StragglerMonitor(threshold=2.0, warmup_steps=2)
     flagged = []

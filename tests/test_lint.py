@@ -1,0 +1,117 @@
+"""repro-lint's own test coverage (DESIGN.md §9).
+
+The fixture corpus in tests/fixtures/lint/ holds one good/bad pair per
+rule; the three bad fixtures marked "historical" reproduce real bugs
+from the repo's past — the PR 3 rescale reassociation, the PR 4
+wall-clock default, and a traced-config-in-shape retrace — so the
+linter can never silently stop catching them.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from tools.lint import lint_file, lint_paths            # noqa: E402
+from tools.lint.engine import SUPPRESS_RE, FileContext  # noqa: E402
+
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+
+# fixture stem -> rule id every finding must carry
+BAD = {
+    "bad_trace_safety": "trace-safety",
+    "bad_cfg_shape": "cfg-shape",                 # historical: retrace
+    "bad_single_rounding": "single-rounding",     # historical: PR 3
+    "bad_bounded_state": "bounded-state",
+    "bad_injected_clock": "injected-clock",       # historical: PR 4
+    "bad_pallas_hygiene": "pallas-hygiene",
+}
+GOOD = ["good_trace_safety", "good_cfg_shape", "good_single_rounding",
+        "good_bounded_state", "good_injected_clock", "good_pallas_hygiene",
+        "good_suppression"]
+
+
+@pytest.mark.parametrize("stem,rule_id", sorted(BAD.items()))
+def test_bad_fixture_flags_its_rule(stem, rule_id):
+    findings = lint_file(FIXTURES / f"{stem}.py")
+    assert findings, f"{stem} produced no findings"
+    assert {f.rule for f in findings} == {rule_id}, findings
+
+
+@pytest.mark.parametrize("stem", GOOD)
+def test_good_fixture_is_clean(stem):
+    assert lint_file(FIXTURES / f"{stem}.py") == []
+
+
+def test_historical_bugs_each_have_a_fixture():
+    """The three bugs that motivated repro-lint stay reproduced."""
+    rescale = (FIXTURES / "bad_single_rounding.py").read_text()
+    assert "(acc * x_scale) * w_scale" in rescale
+    clock = (FIXTURES / "bad_injected_clock.py").read_text()
+    assert "default_factory=time.time" in clock
+    shape = (FIXTURES / "bad_cfg_shape.py").read_text()
+    assert "jnp.zeros((cfg, 4))" in shape
+
+
+@pytest.mark.parametrize("stem", sorted(BAD))
+def test_cli_exits_nonzero_on_bad_fixture(stem):
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.lint",
+         str(FIXTURES / f"{stem}.py")],
+        capture_output=True, text=True, cwd=REPO)
+    assert r.returncode != 0, r.stdout
+
+
+def test_cli_exits_zero_on_good_fixtures():
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.lint"]
+        + [str(FIXTURES / f"{s}.py") for s in GOOD],
+        capture_output=True, text=True, cwd=REPO)
+    assert r.returncode == 0, r.stdout
+
+
+def test_reasonless_suppression_is_a_finding_and_does_not_suppress():
+    findings = lint_file(FIXTURES / "bad_suppression.py")
+    rules = sorted(f.rule for f in findings)
+    assert rules == ["injected-clock", "suppression"], findings
+
+
+def test_suppression_regex_accepts_dash_variants():
+    for sep in ("—", "--", ":"):
+        m = SUPPRESS_RE.search(f"x = 1  # repro-lint: disable=foo {sep} why")
+        assert m and m.group(2) == "why", sep
+    m = SUPPRESS_RE.search("x = 1  # repro-lint: disable=foo")
+    assert m and m.group(2) is None
+
+
+def test_scope_pragma_overrides_path(tmp_path):
+    f = tmp_path / "anywhere.py"
+    f.write_text("# repro-lint: scope=src/repro/serve/x.py\n"
+                 "import time\nt = time.time()\n")
+    assert {x.rule for x in lint_file(f)} == {"injected-clock"}
+    g = tmp_path / "unscoped.py"
+    g.write_text("import time\nt = time.time()\n")
+    assert lint_file(g) == []          # out of every rule's path scope
+
+
+def test_src_lints_clean_with_reasoned_suppressions():
+    findings = lint_paths([REPO / "src"])
+    assert findings == [], "\n".join(map(str, findings))
+    # every suppression in src/ carries a reason
+    for path in sorted((REPO / "src").rglob("*.py")):
+        ctx = FileContext(path)
+        for ln, (_ids, reason) in ctx.suppressions.items():
+            assert reason, f"{ctx.rel}:{ln} reasonless suppression"
+
+
+def test_docs_group_clean_on_repo():
+    from tools.lint import docs_rules
+    assert docs_rules.run() == []
+
+
+def test_retrace_sentinel_passes():
+    from tools.lint import retrace
+    assert retrace.run() == []

@@ -287,11 +287,11 @@ def test_quantized_mlp_per_layer_configs():
     # GEMM at cfg 31 (catches a swapped c1/c2 in _layer_configs)
     from repro.core.quantization import QMAX
     acc1 = approx_matmul_operand(jnp.asarray(xq), jnp.asarray(qm.w1), 1) \
-        + jnp.asarray(qm.b1)
+        + jnp.asarray(qm.b1)[None, :]
     h = jnp.clip(jnp.maximum(acc1, 0) >> qm.shift1, 0, QMAX
                  ).astype(jnp.int8)
     ref = approx_matmul_operand(h, jnp.asarray(qm.w2), 31) \
-        + jnp.asarray(qm.b2)
+        + jnp.asarray(qm.b2)[None, :]
     assert jnp.array_equal(mixed, ref)
 
 

@@ -1,83 +1,17 @@
 #!/usr/bin/env python
-"""Docs-consistency gate (CI): fail when the docs drift from the source
-of truth.
+"""Back-compat shim: the docs-consistency gate now lives in the unified
+lint driver as the ``docs`` rule-group.  Equivalent invocation:
 
-  1. README's tier-1 verify command must be EXACTLY the one ROADMAP.md
-     declares (the ROADMAP is the canonical copy).
-  2. Every ``DESIGN.md §N`` cross-reference in the tree must point at a
-     section heading that actually exists in DESIGN.md (the PR 3
-     renumber left several dangling; this keeps them dead).
-  3. README must reference only BENCH_*.json artifacts that a
-     ``benchmarks/run.py`` entry actually emits.
-
-Run from the repo root:  python tools/check_docs.py
+    python -m tools.lint --group docs
 """
 from __future__ import annotations
 
 import pathlib
-import re
 import sys
 
-ROOT = pathlib.Path(__file__).resolve().parent.parent
-# CHANGES.md / ISSUE.md are historical logs, not living docs
-SCAN_GLOBS = ("src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
-              "examples/**/*.py", "tools/**/*.py", "README.md",
-              "ROADMAP.md", "DESIGN.md")
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-
-def fail(msg: str) -> None:
-    print(f"check_docs: FAIL — {msg}")
-    sys.exit(1)
-
-
-def main() -> None:
-    roadmap = (ROOT / "ROADMAP.md").read_text()
-    readme = (ROOT / "README.md").read_text()
-    design = (ROOT / "DESIGN.md").read_text()
-
-    # 1. verify command: ROADMAP's "**Tier-1 verify:** `cmd`" line
-    m = re.search(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`", roadmap)
-    if not m:
-        fail("ROADMAP.md has no '**Tier-1 verify:** `...`' line")
-    verify_cmd = m.group(1)
-    if f"\n{verify_cmd}\n" not in readme:
-        fail(f"README.md does not contain ROADMAP's tier-1 verify "
-             f"command verbatim:\n  {verify_cmd}")
-
-    # 2. DESIGN.md § cross-references
-    sections = {int(n) for n in re.findall(r"^## §(\d+)", design,
-                                           flags=re.M)}
-    if not sections:
-        fail("DESIGN.md has no '## §N' section headings")
-    bad = []
-    # match variant spellings ("DESIGN §5") and line-wrapped refs
-    # ("DESIGN.md\n§4") — both escaped the first version of this gate
-    ref_re = re.compile(r"DESIGN(?:\.md)?\s*§(\d+)")
-    for pattern in SCAN_GLOBS:
-        for path in sorted(ROOT.glob(pattern)):
-            text = path.read_text()
-            for m in ref_re.finditer(text):
-                if int(m.group(1)) not in sections:
-                    ln = text.count("\n", 0, m.start()) + 1
-                    bad.append(f"{path.relative_to(ROOT)}:{ln} "
-                               f"-> §{m.group(1)}")
-    if bad:
-        fail("dangling DESIGN.md § references (existing sections: "
-             f"{sorted(sections)}):\n  " + "\n  ".join(bad))
-
-    # 3. README's BENCH artifacts are ones the harness emits
-    bench_src = (ROOT / "benchmarks" / "run.py").read_text() + \
-        (ROOT / "benchmarks" / "sharded_decode.py").read_text()
-    emitted = set(re.findall(r"BENCH_\w+\.json", bench_src))
-    missing = set(re.findall(r"BENCH_\w+\.json", readme)) - emitted
-    if missing:
-        fail(f"README references BENCH artifacts no benchmark emits: "
-             f"{sorted(missing)}")
-
-    print(f"check_docs: OK (verify command pinned, "
-          f"{len(sections)} DESIGN sections, § refs clean, "
-          f"{len(emitted)} BENCH artifacts)")
-
+from tools.lint.__main__ import main  # noqa: E402
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main(["--group", "docs"]))

@@ -1,0 +1,9 @@
+"""repro-lint: the repo's invariant checker (DESIGN.md §9).
+
+AST rules over ``src/`` encode the invariants PRs 1-5 paid for in
+debugging time — trace-safety, zero-retrace config purity, the
+single-rounding rescale convention, bounded serving state, injected
+clocks, Pallas kernel hygiene — plus a ``docs`` consistency group and a
+runtime retrace sentinel.  One driver: ``python -m tools.lint``.
+"""
+from .engine import Finding, lint_file, lint_paths  # noqa: F401

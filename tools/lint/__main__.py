@@ -1,0 +1,54 @@
+"""Driver: ``python -m tools.lint [paths...] [--group ast|docs|retrace]``.
+
+With no arguments runs everything CI runs: the AST rules over src/, the
+docs-consistency group, and the runtime retrace sentinel.  With explicit
+paths, lints just those files/dirs with the AST rules (the mode the
+fixture tests use).  Exit code 1 on any finding.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .engine import ROOT, lint_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.lint")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: src/ + docs + "
+                         "retrace sentinel)")
+    ap.add_argument("--group", action="append", default=None,
+                    choices=["ast", "docs", "retrace"],
+                    help="run only these groups (repeatable)")
+    args = ap.parse_args(argv)
+
+    if args.group is not None:
+        groups = set(args.group)
+    elif args.paths:
+        groups = {"ast"}
+    else:
+        groups = {"ast", "docs", "retrace"}
+
+    findings = []
+    if "ast" in groups:
+        paths = args.paths or [ROOT / "src"]
+        findings += lint_paths(paths)
+    if "docs" in groups:
+        from . import docs_rules
+        findings += docs_rules.run()
+    if "retrace" in groups:
+        from . import retrace
+        findings += retrace.run()
+
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"repro-lint: FAIL — {len(findings)} finding(s)")
+        return 1
+    print(f"repro-lint: OK ({', '.join(sorted(groups))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,66 @@
+"""The ``docs`` rule-group: docs-consistency checks (the former
+tools/check_docs.py gate, folded into the one lint driver) plus
+CHANGES.md PR-numbering and README BENCH-artifact verification.
+"""
+from __future__ import annotations
+
+import re
+
+from .engine import ROOT, Finding
+
+SCAN_GLOBS = ("src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
+              "examples/**/*.py", "tools/**/*.py", "README.md",
+              "ROADMAP.md", "DESIGN.md")
+
+
+def run() -> list[Finding]:
+    findings: list[Finding] = []
+
+    def fail(path: str, line: int, msg: str):
+        findings.append(Finding(path, line, "docs", msg))
+
+    roadmap = (ROOT / "ROADMAP.md").read_text()
+    readme = (ROOT / "README.md").read_text()
+    design = (ROOT / "DESIGN.md").read_text()
+
+    # 1. README carries ROADMAP's tier-1 verify command verbatim
+    m = re.search(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`", roadmap)
+    if not m:
+        fail("ROADMAP.md", 1, "no '**Tier-1 verify:** `...`' line")
+    elif f"\n{m.group(1)}\n" not in readme:
+        fail("README.md", 1, "does not contain ROADMAP's tier-1 verify "
+             f"command verbatim: {m.group(1)}")
+
+    # 2. DESIGN.md § cross-references resolve
+    sections = {int(n) for n in re.findall(r"^## §(\d+)", design, flags=re.M)}
+    if not sections:
+        fail("DESIGN.md", 1, "no '## §N' section headings")
+    ref_re = re.compile(r"DESIGN(?:\.md)?\s*§(\d+)")
+    for pattern in SCAN_GLOBS:
+        for path in sorted(ROOT.glob(pattern)):
+            text = path.read_text()
+            for m in ref_re.finditer(text):
+                if int(m.group(1)) not in sections:
+                    ln = text.count("\n", 0, m.start()) + 1
+                    fail(str(path.relative_to(ROOT)), ln,
+                         f"dangling DESIGN.md §{m.group(1)} reference "
+                         f"(existing: {sorted(sections)})")
+
+    # 3. README names only BENCH artifacts a benchmark emits
+    bench_src = (ROOT / "benchmarks" / "run.py").read_text() + \
+        (ROOT / "benchmarks" / "sharded_decode.py").read_text()
+    emitted = set(re.findall(r"BENCH_\w+\.json", bench_src))
+    for name in sorted(set(re.findall(r"BENCH_\w+\.json", readme)) - emitted):
+        fail("README.md", 1,
+             f"references BENCH artifact no benchmark emits: {name}")
+
+    # 4. CHANGES.md PR numbering is contiguous (1..max, each exactly once)
+    changes = (ROOT / "CHANGES.md").read_text()
+    prs = [int(n) for n in re.findall(r"^- PR (\d+):", changes, flags=re.M)]
+    if not prs:
+        fail("CHANGES.md", 1, "no '- PR N:' entries")
+    elif sorted(prs) != list(range(1, max(prs) + 1)):
+        fail("CHANGES.md", 1,
+             f"PR numbering not contiguous 1..{max(prs)}: {sorted(prs)}")
+
+    return findings

@@ -1,0 +1,130 @@
+"""repro-lint core: file contexts, suppression parsing, rule registry.
+
+Rules are plain functions ``rule(ctx) -> iterable[Finding]`` registered
+with the ``@rule("rule-id")`` decorator.  Each rule guards on
+``ctx.scope`` — the repo-relative posix path of the file, overridable in
+out-of-tree fixtures with a ``# repro-lint: scope=src/repro/...`` pragma
+so the test corpus can exercise path-scoped rules.
+
+Suppressions are line-scoped comments:
+
+    # repro-lint: disable=RULE — reason
+
+on the offending line or the line directly above it.  The reason is
+MANDATORY: a suppression without one does not suppress anything and is
+itself reported (rule id ``suppression``) — tribal knowledge has to be
+written down to be waived.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from dataclasses import dataclass
+from typing import Callable, Iterable
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([\w,-]+)"
+    r"(?:\s*(?:—|--|:)\s*(\S.*))?")
+SCOPE_RE = re.compile(r"#\s*repro-lint:\s*scope=([\w/.-]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class FileContext:
+    """One parsed source file + its pragmas, handed to every rule."""
+
+    def __init__(self, path, text: str | None = None):
+        self.path = pathlib.Path(path)
+        self.text = self.path.read_text() if text is None else text
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(self.path))
+        try:
+            self.rel = self.path.resolve().relative_to(ROOT).as_posix()
+        except ValueError:
+            self.rel = self.path.as_posix()
+        m = SCOPE_RE.search(self.text)
+        self.scope = m.group(1) if m else self.rel
+        self.suppressions: dict[int, tuple[set[str], str | None]] = {}
+        for i, ln in enumerate(self.lines, 1):
+            m = SUPPRESS_RE.search(ln)
+            if m:
+                ids = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                self.suppressions[i] = (ids, m.group(2))
+        self._parents: dict[ast.AST, ast.AST] | None = None
+
+    def in_scope(self, *prefixes: str) -> bool:
+        return any(self.scope.startswith(p) for p in prefixes)
+
+    @property
+    def parents(self) -> dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            self._parents = {}
+            for node in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(node):
+                    self._parents[child] = node
+        return self._parents
+
+    def finding(self, node: ast.AST, rule_id: str, message: str) -> Finding:
+        return Finding(self.rel, getattr(node, "lineno", 0), rule_id, message)
+
+
+Rule = Callable[[FileContext], Iterable[Finding]]
+RULES: dict[str, Rule] = {}
+
+
+def rule(rule_id: str):
+    def deco(fn: Rule) -> Rule:
+        RULES[rule_id] = fn
+        return fn
+    return deco
+
+
+def lint_file(path, text: str | None = None,
+              rules: set[str] | None = None) -> list[Finding]:
+    """Run the (selected) AST rules over one file; apply suppressions."""
+    from . import rules as _rules  # noqa: F401  (registers RULES on import)
+    ctx = FileContext(path, text)
+    raw: list[Finding] = []
+    for rid, fn in RULES.items():
+        if rules is None or rid in rules:
+            raw.extend(fn(ctx))
+    kept = []
+    for f in raw:
+        suppressed = False
+        for ln in (f.line, f.line - 1):
+            sup = ctx.suppressions.get(ln)
+            if sup and f.rule in sup[0] and sup[1]:
+                suppressed = True
+                break
+        if not suppressed:
+            kept.append(f)
+    for ln, (_ids, reason) in sorted(ctx.suppressions.items()):
+        if not reason:
+            kept.append(Finding(
+                ctx.rel, ln, "suppression",
+                "suppression without a reason — write "
+                "'# repro-lint: disable=RULE — reason'"))
+    return sorted(kept, key=lambda f: (f.line, f.rule))
+
+
+def lint_paths(paths, rules: set[str] | None = None) -> list[Finding]:
+    """Lint files / directories (directories recurse over ``*.py``)."""
+    findings: list[Finding] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_file(f, rules=rules))
+    return findings

@@ -1,0 +1,58 @@
+"""The ``retrace`` sentinel: a RUNTIME probe of the zero-retrace
+invariant the AST rules can only approximate.
+
+Jits the dense layer with a TRACED error config, runs it at several
+config values, and asserts ONE executable served them all
+(``_cache_size() == 1``).  Also asserts the config is live (different
+configs give different outputs — a config optimized away would make the
+cache check vacuously pass) and that tracing never tries to concretize
+the config (ConcretizationTypeError).
+"""
+from __future__ import annotations
+
+import sys
+
+from .engine import ROOT, Finding
+
+HERE = "tools/lint/retrace.py"
+
+
+def run() -> list[Finding]:
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        import jax
+        import jax.numpy as jnp
+        from repro.core.quantization import quantize
+        from repro.nn.layers import dense
+    except Exception as e:  # pragma: no cover - broken env, not a lint hit
+        return [Finding(HERE, 1, "retrace", f"sentinel could not import "
+                        f"the model stack: {e!r}")]
+
+    w = quantize(
+        jax.random.normal(jax.random.PRNGKey(0), (16, 8)), axis=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+
+    probe = jax.jit(lambda x, w, c: dense(x, w, approx_cfg=c))
+    try:
+        outs = [probe(x, w, jnp.asarray(c, jnp.int32)).block_until_ready()
+                for c in (0, 7, 31)]
+    except jax.errors.ConcretizationTypeError as e:
+        return [Finding(HERE, 1, "retrace",
+                        "tracing dense() concretized the traced config — "
+                        f"a Python-level read is back: {e}")]
+
+    findings = []
+    n_compiles = probe._cache_size()
+    if n_compiles != 1:
+        findings.append(Finding(
+            HERE, 1, "retrace",
+            f"{n_compiles} executables for 3 config values — the error "
+            "config leaked into a shape/branch position (zero-retrace "
+            "broken; expected exactly 1 compile)"))
+    if bool(jnp.array_equal(outs[0], outs[2])):
+        findings.append(Finding(
+            HERE, 1, "retrace",
+            "config 0 and config 31 produced identical outputs — the "
+            "traced config is dead in the jaxpr, so the cache check "
+            "proves nothing"))
+    return findings
