@@ -1,0 +1,266 @@
+"""Chaos matrix for the resilience subsystem (PR 7, DESIGN.md §10).
+
+Runs the serving engine through every injected-fault scenario the
+fault model names (NaN/Inf logits, decode step failure, clock skew,
+stall, kill-and-restore) plus a 2x overload spike served with and
+without the brownout controller, all on a deterministic FakeClock and
+seeded injectors/traffic — the whole matrix is replayable bit-for-bit.
+
+Acceptance bars (ENFORCED — a violation raises, which the harness
+turns into the ERROR row CI greps for):
+
+  * every fault scenario recovers: all requests finish "done" and the
+    finished token streams are BIT-IDENTICAL to the uninjected
+    baseline's;
+  * zero retraces under chaos: each engine ends with exactly one
+    compiled decode and one compiled prefill executable;
+  * under the overload spike, the brownout path holds availability at
+    1.0 (no rejections) by stepping the config ladder down, while the
+    exact-only path demonstrably sheds load (availability < 1.0);
+  * browned-out serving spends strictly less modeled MAC energy per
+    token than exact-only serving.
+
+``run_chaos_matrix`` returns the machine-readable scenario table;
+``benchmarks/run.py`` writes it to BENCH_resilience.json (CI artifact).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+
+class FakeClock:
+    """Deterministic injected time source: each read advances 1 ms."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1e-3
+        return self.t
+
+
+def _small_model():
+    import jax
+    import jax.numpy as jnp
+    from repro.nn import transformer as T
+    cfg = T.ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                        head_dim=16, d_ff=64, vocab_size=64,
+                        scan_layers=False, remat=False, q_chunk=8,
+                        loss_chunks=1, compute_dtype=jnp.float32)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _tokens(completed):
+    return sorted((r.rid, tuple(r.tokens)) for r in completed
+                  if r.status == "done")
+
+
+def _require(ok: bool, msg: str):
+    if not ok:
+        raise RuntimeError(f"resilience bar violated: {msg}")
+
+
+def run_chaos_matrix() -> dict:
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.core.power_model import MAC_SAVING_FRAC
+    from repro.serve.brownout import BrownoutController
+    from repro.serve.engine import Engine, Request
+    from repro.serve.faults import FaultEvent, FaultInjector
+    from repro.serve.traffic import (TrafficClass, TrafficGenerator,
+                                     slo_report)
+
+    cfg, params = _small_model()
+
+    # --- fault scenarios: fixed 3-request workload, faults injected ---
+    def serve(injector, checkpointer=None, snapshot_every=0,
+              max_ticks=400):
+        eng = Engine(params, cfg, max_batch=2, max_len=64,
+                     clock=FakeClock(), fault_injector=injector,
+                     checkpointer=checkpointer,
+                     snapshot_every=snapshot_every,
+                     retry_base_s=1e-3, retry_cap_s=4e-3, seed=0)
+        for rid, lo in enumerate((0, 10, 20)):
+            eng.submit(Request(
+                rid=rid, prompt=np.arange(lo, lo + 5, dtype=np.int32),
+                max_new_tokens=10, ttft_slo_s=60.0, e2e_slo_s=60.0))
+        ticks = 0
+        t0 = time.perf_counter()
+        while ((eng.queue and not eng._draining)
+               or any(s is not None for s in eng.slots)) \
+                and ticks < max_ticks:
+            eng.step()
+            ticks += 1
+        wall_s = time.perf_counter() - t0
+        return eng, _tokens(eng.completed), ticks, wall_s
+
+    base_eng, want, base_ticks, base_s = serve(None)
+    _require(len(want) == 3, f"baseline must finish 3 requests: {want}")
+
+    plans = {
+        "nan_logits": [FaultEvent(tick=2, kind="nan_logits"),
+                       FaultEvent(tick=5, kind="nan_logits", slot=1,
+                                  value=float("inf"))],
+        "step_fail": [FaultEvent(tick=2, kind="step_fail"),
+                      FaultEvent(tick=3, kind="step_fail")],
+        "clock_skew": [FaultEvent(tick=3, kind="clock_skew",
+                                  skew_s=2.0)],
+        "stall": [FaultEvent(tick=4, kind="stall", stall_s=2.0)],
+    }
+    scenarios = [{"scenario": "baseline", "ticks": base_ticks,
+                  "recovery_ticks": 0, "faults_fired": 0,
+                  "bit_identical": True, "zero_retraces": True,
+                  "wall_s": round(base_s, 3),
+                  **base_eng.resilience_report()}]
+    print(f"resilience_baseline,{base_s * 1e6 / base_ticks:.1f},"
+          f"ticks={base_ticks};requests=3")
+
+    for name, plan in plans.items():
+        inj = FaultInjector(plan, seed=0)
+        eng, got, ticks, wall = serve(inj)
+        identical = got == want
+        retraces_ok = (eng._decode._cache_size() == 1
+                       and eng._prefill._cache_size() == 1)
+        _require(identical, f"{name}: tokens diverged from baseline")
+        _require(retraces_ok, f"{name}: chaos run retraced "
+                 f"(decode={eng._decode._cache_size()}, "
+                 f"prefill={eng._prefill._cache_size()})")
+        _require(sum(inj.counts.values()) == len(plan),
+                 f"{name}: {inj.counts} fired, planned {len(plan)}")
+        row = {"scenario": name, "ticks": ticks,
+               "recovery_ticks": ticks - base_ticks,
+               "faults_fired": sum(inj.counts.values()),
+               "bit_identical": identical, "zero_retraces": retraces_ok,
+               "wall_s": round(wall, 3), **eng.resilience_report()}
+        scenarios.append(row)
+        print(f"resilience_{name},{wall * 1e6 / max(ticks, 1):.1f},"
+              f"recovery_ticks={row['recovery_ticks']};"
+              f"faults={row['faults_fired']};bit_identical=True;"
+              f"zero_retraces=True")
+
+    # --- kill-and-restore: a successor engine finishes the stream ----
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        eng = Engine(params, cfg, max_batch=2, max_len=64,
+                     clock=FakeClock(), checkpointer=ck, seed=0)
+        for rid, lo in enumerate((0, 10, 20)):
+            eng.submit(Request(
+                rid=rid, prompt=np.arange(lo, lo + 5, dtype=np.int32),
+                max_new_tokens=10, ttft_slo_s=60.0, e2e_slo_s=60.0))
+        for _ in range(4):
+            eng.step()
+        step = eng.save_snapshot()
+
+        succ = Engine(params, cfg, max_batch=2, max_len=64,
+                      clock=FakeClock(), checkpointer=ck, seed=0)
+        t0 = time.perf_counter()
+        succ.restore_snapshot(step)
+        restore_s = time.perf_counter() - t0
+        got = _tokens(succ.run())
+        identical = got == want
+        retraces_ok = succ._decode._cache_size() == 1
+        _require(identical,
+                 "snapshot_restore: successor tokens diverged")
+        _require(retraces_ok, "snapshot_restore: successor retraced")
+        scenarios.append({
+            "scenario": "snapshot_restore", "ticks": 4,
+            "recovery_ticks": 0, "faults_fired": 1,
+            "bit_identical": identical, "zero_retraces": retraces_ok,
+            "restore_s": round(restore_s, 4),
+            **succ.resilience_report()})
+        print(f"resilience_snapshot_restore,{restore_s * 1e6:.1f},"
+              f"bit_identical=True;zero_retraces=True;"
+              f"restores={succ.n_restores}")
+
+    # --- 2x overload spike: brownout-by-config vs exact-only ---------
+    probe = Engine(params, cfg)
+    exact_tok_pj = (probe._energy_pj_mean(probe.approx_cfg)
+                    * probe.macs_per_token)
+    cap = 2.5 * exact_tok_pj     # 2 slots at exact, all 4 at cfg 31
+
+    def spike_run(with_brownout: bool):
+        gen = TrafficGenerator(
+            (TrafficClass("chat", prompt_len=6, max_new_tokens=6),),
+            rate_per_tick=0.15, seed=11, spikes=((10, 70, 4.0),))
+        bo = BrownoutController(ladder=(0, 31), high_watermark=0.3,
+                                low_watermark=0.1, hold_ticks=4) \
+            if with_brownout else None
+        eng = Engine(params, cfg, max_batch=4, max_len=64,
+                     queue_capacity=6, power_cap_pj_per_tick=cap,
+                     brownout=bo, clock=FakeClock(), seed=0)
+        offered = []
+        t0 = time.perf_counter()
+        for t in range(110):
+            for r in gen.arrivals(t):
+                offered.append(r)
+                eng.submit(r)
+            eng.step()
+        eng.run(max_ticks=200)   # drain the tail
+        wall = time.perf_counter() - t0
+        pj_tok = (eng.mac_energy_pj_per_param
+                  / max(eng.n_tokens_charged, 1) * eng.macs_per_token)
+        return eng, bo, slo_report(offered), len(offered), pj_tok, wall
+
+    eng_b, bo, rep_b, offered_b, pj_b, wall_b = spike_run(True)
+    eng_x, _, rep_x, offered_x, pj_x, wall_x = spike_run(False)
+    _require(offered_b == offered_x,
+             "traffic replay broke: offered loads differ")
+
+    avail_b = rep_b["total"]["availability"]
+    avail_x = rep_x["total"]["availability"]
+    _require(avail_b == 1.0,
+             f"brownout must hold availability at 1.0, got {avail_b} "
+             f"({eng_b.n_rejected} rejected)")
+    _require(avail_x < 1.0,
+             f"exact-only spike should shed load, got {avail_x}")
+    _require(bo.n_escalations >= 1, "spike never escalated brownout")
+    _require(bo.level == 0 and bo.n_recoveries == bo.n_escalations,
+             f"brownout must recover after the spike "
+             f"(level={bo.level}, esc={bo.n_escalations}, "
+             f"rec={bo.n_recoveries})")
+    _require(np.all(eng_b.approx_cfg == 0),
+             "recovery must restore the exact base config")
+    _require(pj_b < pj_x,
+             f"brownout must cut energy/token: {pj_b:.1f} vs {pj_x:.1f}")
+    for eng, tag in ((eng_b, "brownout"), (eng_x, "exact")):
+        _require(eng._decode._cache_size() == 1
+                 and eng._prefill._cache_size() == 1,
+                 f"spike({tag}) retraced the decode executable")
+
+    saving = 1.0 - pj_b / pj_x
+    spike_rows = []
+    for tag, eng, bo_, rep, pj, wall in (
+            ("overload_spike_brownout", eng_b, bo, rep_b, pj_b, wall_b),
+            ("overload_spike_exact", eng_x, None, rep_x, pj_x, wall_x)):
+        spike_rows.append({
+            "scenario": tag, "offered": offered_b,
+            "availability": rep["total"]["availability"],
+            "slo_attainment": rep["total"]["slo_attainment"],
+            "classes": rep["classes"],
+            "energy_pj_per_token": pj,
+            "escalations": bo_.n_escalations if bo_ else 0,
+            "recoveries": bo_.n_recoveries if bo_ else 0,
+            "zero_retraces": True, "wall_s": round(wall, 3),
+            **eng.resilience_report()})
+        print(f"resilience_{tag},{wall * 1e6 / 110:.1f},"
+              f"availability={rep['total']['availability']:.3f};"
+              f"rejected={eng.n_rejected};pj_per_token={pj:.1f}")
+    print(f"resilience_brownout_saving,0.0,"
+          f"energy_saving={saving * 100:.1f}%;"
+          f"ladder_cfg31_saving={MAC_SAVING_FRAC[31] * 100:.1f}%")
+    scenarios.extend(spike_rows)
+
+    return {
+        "bench": "resilience",
+        "model": {"n_layers": 2, "d_model": 32, "vocab": 64},
+        "power_cap_pj_per_tick": cap,
+        "exact_pj_per_token": exact_tok_pj,
+        "brownout_energy_saving": saving,
+        "scenarios": scenarios,
+        "bars": {"bit_identical_recovery": True, "zero_retraces": True,
+                 "spike_availability_with_brownout": avail_b,
+                 "spike_availability_exact_only": avail_x},
+    }

@@ -444,6 +444,28 @@ def bench_scheduler():
             f"<99% agreement): {bad}")
 
 
+def bench_resilience():
+    """The PR-7 tentpole quantified: the chaos matrix.
+
+    Serves a fixed workload through every injected-fault scenario
+    (NaN/Inf logits, decode step failure, clock skew, stall,
+    kill-and-restore) and a 2x overload spike with/without the
+    brownout controller — all on a FakeClock with seeded injectors and
+    traffic, so the matrix replays bit-for-bit.  The bars (bit-
+    identical recovery, zero retraces under chaos, availability 1.0
+    under the spike via the config ladder) are ENFORCED in
+    ``benchmarks/resilience.py``: a violation raises and becomes the
+    ERROR row CI greps for.  Emits BENCH_resilience.json (CI artifact).
+    """
+    import json
+
+    from benchmarks.resilience import run_chaos_matrix
+
+    out = run_chaos_matrix()
+    with open("BENCH_resilience.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+
+
 def bench_sharded_decode():
     """The PR-5 tentpole quantified: the Engine on a TP/SP mesh.
 
@@ -562,6 +584,7 @@ BENCHES = {
     "pallas_path": bench_pallas_path,
     "moe_path": bench_moe_path,
     "scheduler": bench_scheduler,
+    "resilience": bench_resilience,
     "sharded_decode": bench_sharded_decode,
     "lm_energy": bench_lm_energy_model,
     "roofline": bench_roofline_table,

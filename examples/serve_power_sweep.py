@@ -209,6 +209,42 @@ def main():
           f"{rep['probes']} probes ({rep['agreement']*100:.0f}% agree, "
           f"{rep['backoffs']} backoffs), {rep['retunes']} retunes — "
           f"probes and retunes recompiled nothing")
+    # ---- chaos-hardened serving (PR 7) ----------------------------------
+    # The same engine under injected faults (DESIGN.md §10): a seeded
+    # FaultInjector corrupts logits and fails a decode step mid-run; the
+    # NaN/Inf guard rolls the tick back (cache uncommitted) and
+    # quarantines the offending config one notch toward exact, the
+    # retry path re-decodes after a capped backoff, and a
+    # BrownoutController sheds joules/token — not requests — under
+    # queue pressure.  Chaos compiles NOTHING new: the injector only
+    # touches executable OUTPUTS, so the zero-recompile invariant of
+    # every section above holds under fault load too.
+    from repro.serve.brownout import BrownoutController
+    from repro.serve.faults import FaultEvent, FaultInjector
+    inj = FaultInjector([FaultEvent(tick=2, kind="nan_logits"),
+                         FaultEvent(tick=5, kind="step_fail")], seed=0)
+    eng_r = Engine(params, cfg, max_batch=3, max_len=64,
+                   queue_capacity=8, fault_injector=inj,
+                   brownout=BrownoutController(ladder=(0, 16, 31),
+                                               high_watermark=0.5,
+                                               hold_ticks=2),
+                   retry_base_s=1e-3)
+    eng_r.rng = jax.random.PRNGKey(0)
+    for i, p in enumerate(prompts):
+        eng_r.submit(Request(rid=600 + i, prompt=p, max_new_tokens=8,
+                             ttft_slo_s=30.0, e2e_slo_s=30.0))
+    done, eng_r.completed = eng_r.run(), []
+    rr = eng_r.resilience_report()
+    assert all(r.status == "done" for r in done), rr
+    assert (eng_r._decode._cache_size(),
+            eng_r._prefill._cache_size()) == caches_after_warmup
+    print(f"\nchaos run: {len(done)} requests served through "
+          f"{sum(inj.counts.values())} injected faults "
+          f"({rr['nan_events']} NaN rollbacks, {rr['retries']} retries, "
+          f"{rr['quarantined']} quarantines, "
+          f"{eng_r.brownout.n_escalations} brownout escalations) — "
+          f"every request finished, nothing recompiled")
+
     # ---- the sharded engine (PR 5) --------------------------------------
     # Engine(mapping=...) serves the SAME model TP-sharded over a
     # (data, model) mesh (DESIGN.md §8): params placed by their logical

@@ -20,6 +20,18 @@ Off-TPU, force host devices first, e.g.:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
       --smoke --mesh 2x4
+
+Resilience (DESIGN.md §10): --traffic RATE drives the engine from a
+replayable Poisson generator for --ticks engine ticks (--spike
+START:END:MULT adds a burst window), --ttft-slo/--e2e-slo stamp
+per-request deadlines, --queue-capacity bounds admission,
+--power-cap-frac caps the modeled pool power (fraction of max_batch
+exact-config tokens/tick), --brownout LADDER degrades along the config
+ladder under pressure, and --chaos SEED replays a seeded fault plan:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --traffic 0.5 --spike 10:40:4.0 --ticks 80 --queue-capacity 8 \
+      --power-cap-frac 0.6 --brownout 0,16,31 --chaos 7
 """
 from __future__ import annotations
 
@@ -56,6 +68,30 @@ def main():
                          "bit-identical when tp divides the KV-head "
                          "count, see DESIGN.md §8) or sequence-parallel "
                          "(seq)")
+    ap.add_argument("--queue-capacity", type=int, default=256,
+                    help="bounded admission queue; overflow is an "
+                         "explicit rejection (DESIGN.md §10)")
+    ap.add_argument("--ttft-slo", type=float, default=None,
+                    help="per-request time-to-first-token SLO (s)")
+    ap.add_argument("--e2e-slo", type=float, default=None,
+                    help="per-request end-to-end SLO (s)")
+    ap.add_argument("--power-cap-frac", type=float, default=None,
+                    help="admission power cap as a fraction of "
+                         "max_batch exact-config tokens/tick")
+    ap.add_argument("--brownout", default=None, metavar="LADDER",
+                    help="comma-separated config ladder for graceful "
+                         "degradation under pressure, e.g. 0,16,31")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="inject a seeded, replayable fault plan "
+                         "(NaN logits, step failure, stall)")
+    ap.add_argument("--traffic", type=float, default=None, metavar="RATE",
+                    help="drive from a replayable Poisson arrival "
+                         "stream at RATE requests/tick instead of the "
+                         "fixed --requests batch")
+    ap.add_argument("--spike", default=None, metavar="START:END:MULT",
+                    help="traffic burst window (ticks), e.g. 10:40:4.0")
+    ap.add_argument("--ticks", type=int, default=60,
+                    help="engine ticks to drive under --traffic")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -85,31 +121,79 @@ def main():
         from repro.serve.scheduler import PowerBudgetScheduler
         sched = PowerBudgetScheduler(0.0)   # budget set below from the
         #                                     model's exact-mode pJ/token
+    brownout = None
+    if args.brownout is not None:
+        from repro.serve.brownout import BrownoutController
+        ladder = tuple(int(x) for x in args.brownout.split(","))
+        brownout = BrownoutController(ladder=ladder)
+    injector = None
+    if args.chaos is not None:
+        from repro.serve.faults import FaultEvent, FaultInjector
+        r = np.random.default_rng(args.chaos)
+        injector = FaultInjector(
+            [FaultEvent(tick=int(r.integers(2, 12)), kind="nan_logits"),
+             FaultEvent(tick=int(r.integers(4, 16)), kind="step_fail"),
+             FaultEvent(tick=int(r.integers(6, 20)), kind="stall",
+                        stall_s=0.05)], seed=args.chaos)
+        print(f"chaos plan (seed {args.chaos}): "
+              f"{[(e.tick, e.kind) for e in injector.plan]}")
     eng = Engine(params, cfg, max_batch=args.max_batch,
                  max_len=args.max_len, approx_cfg=args.approx_cfg,
-                 scheduler=sched, mapping=mapping, param_specs=specs)
+                 scheduler=sched, mapping=mapping, param_specs=specs,
+                 queue_capacity=args.queue_capacity, brownout=brownout,
+                 fault_injector=injector)
+    from repro.core.power_model import energy_per_token_pj
+    exact_pj = energy_per_token_pj(
+        np.zeros_like(eng.approx_cfg), eng.macs_per_token,
+        eng._moe_mac_frac)
     if sched is not None:
-        from repro.core.power_model import energy_per_token_pj
-        exact_pj = energy_per_token_pj(
-            np.zeros_like(eng.approx_cfg), eng.macs_per_token,
-            eng._moe_mac_frac)
         sched.set_budget(args.budget_frac * exact_pj)
         print(f"power-budget scheduler: {args.budget_frac:.2f} x exact = "
               f"{sched.budget_pj_per_token/1e6:.3f} uJ/token")
+    if args.power_cap_frac is not None:
+        eng.power_cap_pj_per_tick = (args.power_cap_frac
+                                     * args.max_batch * exact_pj)
+        print(f"admission power cap: {args.power_cap_frac:.2f} x "
+              f"{args.max_batch} exact tokens/tick")
     rng = np.random.default_rng(0)
     t0 = time.time()
-    for rid in range(args.requests):
-        eng.submit(Request(
-            rid=rid, prompt=rng.integers(0, cfg.vocab_size,
-                                         size=int(rng.integers(4, 24))),
-            max_new_tokens=args.max_new))
-    done = eng.run()
+    offered = None
+    if args.traffic is not None:
+        from repro.serve.traffic import (TrafficClass, TrafficGenerator,
+                                         slo_report)
+        spikes = ()
+        if args.spike:
+            a, b, m = args.spike.split(":")
+            spikes = ((int(a), int(b), float(m)),)
+        gen = TrafficGenerator(
+            (TrafficClass("cli", ttft_slo_s=args.ttft_slo,
+                          e2e_slo_s=args.e2e_slo, prompt_len=8,
+                          max_new_tokens=args.max_new),),
+            rate_per_tick=args.traffic, seed=0,
+            vocab_size=cfg.vocab_size, spikes=spikes)
+        offered = []
+        for t in range(args.ticks):
+            for req in gen.arrivals(t):
+                offered.append(req)
+                eng.submit(req)
+            eng.step()
+        done = eng.run()           # drain the tail
+    else:
+        for rid in range(args.requests):
+            eng.submit(Request(
+                rid=rid, prompt=rng.integers(0, cfg.vocab_size,
+                                             size=int(rng.integers(4, 24))),
+                max_new_tokens=args.max_new,
+                ttft_slo_s=args.ttft_slo, e2e_slo_s=args.e2e_slo))
+        done = eng.run()
     dt = time.time() - t0
     total_new = sum(len(r.tokens) for r in done)
-    ttfts = [r.first_token_at - r.submitted_at for r in done]
+    ttfts = [r.first_token_at - r.submitted_at for r in done
+             if r.first_token_at is not None]
+    ttft_note = (f"TTFT p50 {np.median(ttfts)*1e3:.0f} ms"
+                 if ttfts else "no first tokens")
     print(f"{len(done)} requests, {total_new} tokens in {dt:.2f}s "
-          f"({total_new/dt:.1f} tok/s); "
-          f"TTFT p50 {np.median(ttfts)*1e3:.0f} ms")
+          f"({total_new/dt:.1f} tok/s); {ttft_note}")
     rep = eng.energy_report()
     print(f"approx_cfg={rep['approx_cfg']} modeled MAC energy "
           f"{rep['modeled_mac_energy_j']*1e3:.2f} mJ "
@@ -123,6 +207,25 @@ def main():
               f"{s['backoffs']} backoffs), energy/token "
               f"{measured/1e6:.3f} uJ vs budget "
               f"{s['budget_pj_per_token']/1e6:.3f} uJ")
+    rr = eng.resilience_report()
+    if any((rr["rejected"], rr["expired"], rr["failed"], rr["retries"],
+            rr["nan_events"], injector, brownout)):
+        print(f"resilience: rejected {rr['rejected']}, expired "
+              f"{rr['expired']}, failed {rr['failed']}, retries "
+              f"{rr['retries']}, nan events {rr['nan_events']}, "
+              f"quarantined {rr['quarantined']}")
+    if brownout is not None:
+        b = brownout.report()
+        print(f"brownout: {b['escalations']} escalations, "
+              f"{b['recoveries']} recoveries, final level "
+              f"{b['level']} (ladder {b['ladder']})")
+    if injector is not None:
+        print(f"chaos fired: {injector.report()['counts']}")
+    if offered is not None:
+        tot = slo_report(offered)["total"]
+        print(f"traffic: {tot['offered']} offered, availability "
+              f"{tot['availability']*100:.1f}%, SLO attainment "
+              f"{tot['slo_attainment']*100:.1f}%")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,151 @@
+"""Brownout: graceful degradation along the paper's error-config knob
+(DESIGN.md §10).
+
+Classic brownouts shed load by disabling features; here the shed axis
+is the accelerator's OWN degradation knob — under queue pressure or
+fault pressure, step the pool's error configs down the ladder to cut
+joules/token (the paper's 13.33%-power-for-0.92%-accuracy trade,
+composed over the 32-config family up to ~44% MAC energy), and under a
+power-gated admission cap (``Engine(power_cap_pj_per_tick=...)``)
+cheaper tokens directly buy MORE concurrent slots: the engine keeps
+admitting instead of rejecting.  Degrade quality before availability.
+
+Escalation/recovery are hysteresis-gated exactly like the scheduler's
+probe backoff: a level change starts a ``hold_ticks`` freeze, and
+recovery additionally needs a ``hold_ticks``-long calm streak — a
+single good tick never whipsaws the pool back up.
+
+Composition with ``PowerBudgetScheduler`` (the two must not fight over
+``engine.set_approx_cfg``): when the engine runs a scheduler, the
+brownout NEVER writes configs itself — it scales the scheduler's
+energy budget (``set_budget_scale``), and the scheduler's next retune
+re-plans the pool toward the tightened budget with all of its measured
+degradation feedback intact.  One writer, one knob, two control loops
+stacked by priority.  Without a scheduler the brownout writes the
+engine config directly: the base config is saved on first escalation
+and restored exactly on full recovery, and escalation FLOORS each cell
+at the ladder config's saving (a cell already saving more is left
+alone — brownout only ever pushes toward more saving, never less).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from repro.core.power_model import MAC_SAVING_FRAC
+
+DEFAULT_LADDER = (0, 8, 16, 24, 31)
+
+
+class BrownoutController:
+    """Queue/fault-pressure → config-ladder level controller.
+
+    Pass as ``Engine(brownout=...)``; the engine calls ``on_tick``
+    first thing every tick (before admission, so a level change
+    affects this very tick's power-gated admission).
+
+    ladder: config per brownout level; level 0 is "no brownout"
+        (ladder[0] is ignored — level 0 restores the base config or a
+        1.0 budget scale).  Defaults sample the saving range up to the
+        max-saving config 31.
+    high_watermark / low_watermark (queue-utilization fractions):
+        escalate above high, count calm below low — the gap is the
+        hysteresis band.
+    fault_threshold: per-tick fault-pressure delta (new retries + NaN
+        events + failures since the last tick) that also escalates.
+    hold_ticks: freeze after any level change, and the calm-streak
+        length recovery requires.
+    """
+
+    def __init__(self, ladder=DEFAULT_LADDER, *,
+                 high_watermark: float = 0.75,
+                 low_watermark: float = 0.25,
+                 fault_threshold: int = 2,
+                 hold_ticks: int = 8):
+        ladder = tuple(int(c) for c in ladder)
+        assert len(ladder) >= 2, "need at least one degraded level"
+        self.ladder = ladder
+        self.high_watermark = float(high_watermark)
+        self.low_watermark = float(low_watermark)
+        self.fault_threshold = int(fault_threshold)
+        self.hold_ticks = int(hold_ticks)
+
+        self.level = 0
+        self.n_escalations = 0
+        self.n_recoveries = 0
+        self._hold = 0
+        self._calm = 0
+        self._base_cfg: np.ndarray | None = None
+        self._last_faults = 0
+        # bounded audit window: (tick-local level, utilization,
+        # fault delta) per tick; counters above are the lifetime story
+        self.history: deque[tuple[int, float, int]] = deque(maxlen=4096)
+
+    # -- pressure signals ------------------------------------------------
+    def _fault_pressure(self, engine) -> int:
+        faults = engine.n_retries + engine.n_nan_events + engine.n_failed
+        delta = faults - self._last_faults
+        self._last_faults = faults
+        return delta
+
+    def budget_scale(self) -> float:
+        """Budget multiplier for the scheduler-composition path: the
+        fraction of exact energy the current ladder config keeps.
+        Level 0 → 1.0; deeper levels tighten the scheduler's budget by
+        exactly the ladder config's modeled saving."""
+        return float(1.0 - MAC_SAVING_FRAC[self.ladder[self.level]])
+
+    # -- engine hook -----------------------------------------------------
+    def on_tick(self, engine) -> None:
+        bp = engine.backpressure
+        util = float(bp["utilization"])
+        fault_delta = self._fault_pressure(engine)
+        pressure = (util >= self.high_watermark
+                    or fault_delta >= self.fault_threshold)
+        calm = util <= self.low_watermark and fault_delta == 0
+        self._calm = self._calm + 1 if calm else 0
+        if self._hold > 0:
+            self._hold -= 1
+        elif pressure and self.level < len(self.ladder) - 1:
+            self.level += 1
+            self.n_escalations += 1
+            self._hold = self.hold_ticks
+            self._calm = 0
+            self._apply(engine)
+        elif calm and self.level > 0 and self._calm >= self.hold_ticks:
+            self.level -= 1
+            self.n_recoveries += 1
+            self._hold = self.hold_ticks
+            self._calm = 0
+            self._apply(engine)
+        self.history.append((self.level, util, fault_delta))
+
+    # -- actuation -------------------------------------------------------
+    def _apply(self, engine) -> None:
+        if engine.scheduler is not None:
+            # one writer: tighten/relax the scheduler's budget and let
+            # its next retune re-plan the pool (feedback state intact)
+            engine.scheduler.set_budget_scale(self.budget_scale())
+            return
+        if self.level == 0:
+            if self._base_cfg is not None:
+                engine.set_approx_cfg(self._base_cfg)
+                self._base_cfg = None
+            return
+        if self._base_cfg is None:
+            self._base_cfg = engine.approx_cfg.copy()
+        floor = self.ladder[self.level]
+        base = self._base_cfg
+        # floor every cell at the ladder config's saving: cells already
+        # saving at least that much keep their (possibly hand-tuned)
+        # config — brownout never reduces saving
+        vec = np.where(MAC_SAVING_FRAC[base] >= MAC_SAVING_FRAC[floor],
+                       base, floor).astype(np.int32)
+        engine.set_approx_cfg(vec)
+
+    def report(self) -> dict:
+        return {"level": self.level, "ladder": list(self.ladder),
+                "escalations": self.n_escalations,
+                "recoveries": self.n_recoveries,
+                "budget_scale": self.budget_scale()}

@@ -69,6 +69,28 @@ bit-identical to the single-host path (int8 MACs accumulate in int32,
 which is exact under any contraction-dim split, and per-head attention
 stays whole on one shard; tests/test_sharded_serving.py).
 
+PR 7 hardens the loop for chaos (DESIGN.md §10).  Admission is BOUNDED
+(``queue_capacity``; ``submit`` returns False and stamps the request
+``rejected`` when full — ``backpressure`` exposes the signal) and
+optionally POWER-GATED (``power_cap_pj_per_tick``: a request is only
+admitted while the pool's modeled pJ/tick stays under the cap — cheaper
+configs therefore buy concurrency, the brownout lever).  Requests carry
+TTFT/e2e deadlines evicted from the injected clock; decode failures
+retry with capped exponential backoff + deterministic jitter; a NaN/Inf
+guard checks decode logits BEFORE the cache commits, so a corrupted
+step is rolled back for free while the offending config steps one
+notch toward exact (``scheduler.quarantine`` when one is attached — the
+same one-notch hysteresis as probe backoff — else directly).
+``Engine(checkpointer=...)`` snapshots the full serving state (cache,
+config tensors, slots, queue, counters, sampler key) through
+``checkpoint.Checkpointer`` so a killed engine resumes mid-stream
+bit-identically, and ``run(preemption=...)`` wires
+``dist.fault_tolerance.PreemptionHandler`` in for graceful drain.
+Chaos itself is injected via ``Engine(fault_injector=...)``
+(serve/faults.py) and degradation policy via ``Engine(brownout=...)``
+(serve/brownout.py) — both pure python around the SAME two compiled
+executables: zero retraces under chaos.
+
 CONFIG-KEY CONVENTION (used by ``apply_allocation``, the scheduler,
 and the controller alike): a config-tensor cell is addressed by
 ``layer`` (int index into the depth axis), then — only when the engine
@@ -88,6 +110,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.approx_multiplier import N_CONFIGS
+from repro.core.controller import step_down_config
 from repro.core.power_model import (ENERGY_PER_MAC_PJ, MAC_SAVING_FRAC,
                                     energy_per_token_pj, error_rank)
 from repro.dist.sharding import activate as _activate, lsc_tree
@@ -135,6 +158,50 @@ class Request:
     done: bool = False
     first_token_at: float | None = None
     finished_at: float | None = None
+    # -- resilience (PR 7) ---------------------------------------------
+    ttft_slo_s: float | None = None     # deadline queue→first token;
+                                        # expired in the queue when missed
+    e2e_slo_s: float | None = None      # deadline submit→finish; the
+                                        # slot is evicted when missed
+    cls: str = "default"                # traffic class (serve/traffic.py)
+    status: str = "queued"              # queued|active|done|rejected|
+                                        # expired|failed
+    retries: int = 0                    # decode failures survived
+
+
+def _pack_request(r: Request | None) -> dict | None:
+    """Request → msgpack-able dict (snapshot metadata)."""
+    if r is None:
+        return None
+    return {"rid": int(r.rid), "prompt": np.asarray(r.prompt).tolist(),
+            "max_new_tokens": int(r.max_new_tokens),
+            "temperature": float(r.temperature),
+            "approx_cfg": (None if r.approx_cfg is None
+                           else np.asarray(r.approx_cfg).tolist()),
+            "submitted_at": r.submitted_at,
+            "tokens": [int(t) for t in r.tokens], "done": bool(r.done),
+            "first_token_at": r.first_token_at,
+            "finished_at": r.finished_at,
+            "ttft_slo_s": r.ttft_slo_s, "e2e_slo_s": r.e2e_slo_s,
+            "cls": r.cls, "status": r.status, "retries": int(r.retries)}
+
+
+def _unpack_request(d: dict | None) -> Request | None:
+    if d is None:
+        return None
+    r = Request(rid=d["rid"],
+                prompt=np.asarray(d["prompt"], np.int32),
+                max_new_tokens=d["max_new_tokens"],
+                temperature=d["temperature"],
+                approx_cfg=d["approx_cfg"],
+                submitted_at=d["submitted_at"],
+                ttft_slo_s=d["ttft_slo_s"], e2e_slo_s=d["e2e_slo_s"],
+                cls=d["cls"], status=d["status"], retries=d["retries"])
+    r.tokens = list(d["tokens"])
+    r.done = d["done"]
+    r.first_token_at = d["first_token_at"]
+    r.finished_at = d["finished_at"]
+    return r
 
 
 class Engine:
@@ -143,7 +210,13 @@ class Engine:
                  cfg_groups: int = 1, cfg_experts: int = 1,
                  quantize_weights: bool = True, scheduler=None,
                  clock: Callable[[], float] = time.time,
-                 mapping=None, param_specs=None):
+                 mapping=None, param_specs=None,
+                 queue_capacity: int = 256,
+                 max_retries: int = 2, retry_base_s: float = 0.05,
+                 retry_cap_s: float = 2.0, nan_max_strikes: int = 2,
+                 power_cap_pj_per_tick: float | None = None,
+                 fault_injector=None, brownout=None,
+                 checkpointer=None, snapshot_every: int = 0):
         """Continuous-batching engine over one compiled prefill + one
         compiled decode executable.
 
@@ -184,6 +257,36 @@ class Engine:
             returned for these params; required to shard the params
             when ``mapping`` is given (without it they replicate, the
             cache still shards).
+
+        Resilience knobs (PR 7, DESIGN.md §10):
+
+        queue_capacity (default 256): admission-queue bound; a full
+            queue REJECTS (``submit`` returns False) instead of
+            growing — ``backpressure`` reports utilization.
+        max_retries (default 2): decode failures a request survives
+            before it is evicted as ``failed``.
+        retry_base_s / retry_cap_s (defaults 0.05 / 2.0): capped
+            exponential backoff between failed decode attempts
+            (base·2^(streak-1), plus ≤10% deterministic jitter seeded
+            from ``seed`` and the failure count).
+        nan_max_strikes (default 2): consecutive non-finite-logits
+            strikes a slot survives; past it the engine restores the
+            last snapshot (when a checkpointer holds one — persistent
+            cache corruption) or evicts the slot as ``failed``.
+        power_cap_pj_per_tick (default None = ungated): admission power
+            gate — a request is admitted only while (active+1) slots'
+            modeled pJ/tick stays under the cap, so stepping configs
+            down (brownout) buys admission headroom.
+        fault_injector (default None): a ``serve.faults.FaultInjector``;
+            the engine wraps its clock and calls the injector's tick
+            hooks — chaos is replayable from the injector's plan+seed.
+        brownout (default None): a ``serve.brownout
+            .BrownoutController`` consulted at the top of every tick.
+        checkpointer (default None): a ``checkpoint.Checkpointer`` for
+            ``save_snapshot``/``restore_snapshot`` (and graceful
+            drain's snapshot-and-exit path).
+        snapshot_every (default 0 = off): auto-snapshot cadence in
+            decode steps.
         """
         # quantize every dense GEMM weight ONCE at engine init and carry
         # QTensors through the jitted step functions — no decode step
@@ -242,10 +345,20 @@ class Engine:
         self.approx_cfg = self._as_layer_vector(
             0 if approx_cfg is None else approx_cfg)
         # injected time source: request ordering, TTFT stamps, and the
-        # scheduler's tick timing all read it — deterministic in tests
-        self.clock = clock
+        # scheduler's tick timing all read it — deterministic in tests.
+        # A fault injector interposes its skew/stall view, so deadline
+        # and backoff logic sees faulted time through the same source.
+        self.fault_injector = fault_injector
+        self.clock = (clock if fault_injector is None
+                      else fault_injector.wrap_clock(clock))
         self.rng = jax.random.PRNGKey(seed)
-        self.queue: list[Request] = []
+        # bounded admission (PR 7): submit() checks the bound and
+        # rejects explicitly — the maxlen is belt-and-braces so the
+        # queue can never grow past its capacity even if a caller
+        # appends directly
+        self.queue_capacity = int(queue_capacity)
+        assert self.queue_capacity > 0, queue_capacity
+        self.queue: deque[Request] = deque(maxlen=self.queue_capacity)
         self.slots: list[Request | None] = [None] * max_batch
         self.slot_cfg = np.broadcast_to(
             self.approx_cfg, (max_batch,) + self.approx_cfg.shape).copy()
@@ -278,6 +391,31 @@ class Engine:
             maxlen=65536)
         self.completed: list[Request] = []
         self._macs_per_token: float | None = None
+
+        # -- resilience state (PR 7) ----------------------------------
+        self.max_retries = int(max_retries)
+        self.retry_base_s = float(retry_base_s)
+        self.retry_cap_s = float(retry_cap_s)
+        self.nan_max_strikes = int(nan_max_strikes)
+        self.power_cap_pj_per_tick = power_cap_pj_per_tick
+        self.brownout = brownout
+        self.checkpointer = checkpointer
+        self.snapshot_every = int(snapshot_every)
+        self._jitter_seed = int(seed)
+        self._draining = False
+        self._backoff_until = 0.0   # injected-clock time decode resumes
+        self._retry_streak = 0      # consecutive failed decode attempts
+        self._nan_strikes = np.zeros(max_batch, dtype=np.int64)
+        self._last_snapshot: int | None = None
+        self.last_error: str | None = None
+        self.n_rejected = 0
+        self.n_expired = 0
+        self.n_failed = 0
+        self.n_retries = 0
+        self.n_nan_events = 0
+        self.n_quarantined = 0
+        self.n_snapshots = 0
+        self.n_restores = 0
 
         cfg_ = cfg
         cache_spec_ = self.cache_spec
@@ -419,18 +557,98 @@ class Engine:
         return pool_join(np.stack(active))  # (k, n_layers[, cfg_groups])
 
     # -- request management --------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> bool:
+        """Admit ``req`` to the bounded queue.  Returns False — and
+        stamps the request ``rejected`` — when the queue is at capacity
+        or the engine is draining: explicit rejection with backpressure
+        beats unbounded growth (the pre-PR-7 queue was a bare list)."""
         if req.submitted_at is None:
             req.submitted_at = self.clock()
+        if self._draining or len(self.queue) >= self.queue_capacity:
+            req.status = "rejected"
+            self.n_rejected += 1
+            return False
+        req.status = "queued"
         self.queue.append(req)
+        return True
+
+    @property
+    def backpressure(self) -> dict:
+        """Admission-pressure signal for callers and the brownout
+        controller: queue depth/utilization, active slots, lifetime
+        rejections, drain state."""
+        return {"queued": len(self.queue),
+                "capacity": self.queue_capacity,
+                "utilization": len(self.queue) / self.queue_capacity,
+                "active": sum(s is not None for s in self.slots),
+                "rejected": self.n_rejected,
+                "draining": self._draining}
+
+    def drain(self) -> None:
+        """Stop admitting (submit rejects, _admit idles); in-flight
+        slots finish — or are snapshot — in ``run``."""
+        self._draining = True
+
+    def _evict(self, slot: int, status: str) -> None:
+        """Remove an in-flight request from its slot with a terminal
+        status ("expired"/"failed").  The KV rows stay in the pool but
+        are unreachable — the slot's next admission overwrites them."""
+        req = self.slots[slot]
+        if req is None:
+            return
+        req.status = status
+        req.finished_at = self.clock()
+        self.completed.append(req)
+        self.slots[slot] = None
+        self._nan_strikes[slot] = 0
+        if status == "expired":
+            self.n_expired += 1
+        elif status == "failed":
+            self.n_failed += 1
+
+    def _expire(self, now: float) -> None:
+        """Deadline sweep from the injected clock: queued requests past
+        their TTFT SLO can no longer meet it (prefill+first token would
+        land late) and are expired in place; active slots past their
+        e2e SLO are evicted — their remaining tokens would all be
+        late, so the pool capacity goes to requests that can still
+        meet their deadlines."""
+        late = [r for r in self.queue
+                if r.ttft_slo_s is not None
+                and now - r.submitted_at > r.ttft_slo_s]
+        if late:
+            late_ids = {id(r) for r in late}   # dataclass __eq__ is by
+            keep = [r for r in self.queue      # value — filter by identity
+                    if id(r) not in late_ids]
+            self.queue.clear()
+            self.queue.extend(keep)
+            for r in late:
+                r.status = "expired"
+                r.finished_at = now
+                self.n_expired += 1
+                self.completed.append(r)
+        for i, r in enumerate(self.slots):
+            if (r is not None and r.e2e_slo_s is not None
+                    and now - r.submitted_at > r.e2e_slo_s):
+                self._evict(i, "expired")
 
     def _splice_cache(self, slot: int, row_cache):
         """Copy a single-row prefill cache into slot `slot` of the pool.
-        Mismatched `pos` semantics are kept per-slot in numpy."""
+        Mismatched `pos` semantics are kept per-slot in numpy.
+
+        KV pool leaves are stacked (layers_in_block, batch, seq,
+        kv_heads, head_dim) — batch is axis 1.  (This used to write
+        ``pool.at[slot]``, which indexes the LAYER axis: slot k's row
+        broadcast over every batch entry of layer k, silently
+        corrupting every other in-flight request's cache — the exact
+        shared-state poisoning class this PR's guards exist for;
+        regression-pinned by tests/test_resilience.py's
+        batched-vs-solo bit-identity test.)"""
         def splice(pool, row):
             if pool.ndim == 0 or row.ndim == 0:
                 return pool
-            return pool.at[slot].set(row[0])
+            assert pool.shape[1] == self.max_batch, pool.shape
+            return pool.at[:, slot].set(row[:, 0])
         self.cache = jax.tree.map(splice, self.cache, row_cache)
         if self.mapping is not None:
             # re-pin the canonical sharding: the eager splice's output
@@ -459,12 +677,43 @@ class Engine:
         self.n_tokens_charged += tokens
         self.energy_log.append((kind, tokens, pj))
 
+    def _admission_power_ok(self, req_cfg: np.ndarray,
+                            pinned: bool) -> bool:
+        """Power gate: admit only while the pool's modeled energy rate
+        — (active+1) tokens/tick at the candidate pool config — stays
+        under ``power_cap_pj_per_tick``.  The candidate joins the pool
+        the same way _pool_cfg will, so the gate prices exactly the
+        config the pool would execute.  This is the brownout lever:
+        stepping configs down lowers pJ/token, so more slots fit under
+        the cap and the queue drains instead of rejecting."""
+        if self.power_cap_pj_per_tick is None:
+            return True
+        stack = [self.slot_cfg[i] if self.slot_pinned[i]
+                 else self.approx_cfg
+                 for i, r in enumerate(self.slots) if r is not None]
+        stack.append(req_cfg if pinned else self.approx_cfg)
+        cand = pool_join(np.stack(stack))
+        pj_per_tick = (len(stack) * self._energy_pj_mean(cand)
+                       * self.macs_per_token)
+        return pj_per_tick <= self.power_cap_pj_per_tick
+
     def _admit(self):
+        if self._draining:
+            return
         for slot in range(self.max_batch):
             if self.slots[slot] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue[0]
                 req_cfg = self._as_layer_vector(req.approx_cfg)
-                self.slot_pinned[slot] = req.approx_cfg is not None
+                pinned = req.approx_cfg is not None
+                if not self._admission_power_ok(req_cfg, pinned):
+                    # head-of-line wait, not a skip: FIFO order is part
+                    # of the fairness contract, and the brownout/
+                    # scheduler lowering pJ/token is what unblocks it
+                    break
+                self.queue.popleft()
+                req.status = "active"
+                self._nan_strikes[slot] = 0
+                self.slot_pinned[slot] = pinned
                 tokens = self._replicate(
                     jnp.asarray(req.prompt, jnp.int32)[None, :])
                 logits, row_cache = self._prefill(self.params, tokens,
@@ -489,6 +738,20 @@ class Engine:
             return self._step()
 
     def _step(self):
+        inj = self.fault_injector
+        if inj is not None:
+            inj.begin_tick(self)
+        if self.brownout is not None:
+            # before admission, so a level change prices THIS tick's
+            # power-gated admissions
+            self.brownout.on_tick(self)
+        now = self.clock()
+        self._expire(now)
+        if now < self._backoff_until:
+            # failure backoff window: hold decoding (and admission —
+            # whatever failed the decode likely fails prefill too)
+            return bool(self.queue
+                        or any(s is not None for s in self.slots))
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
@@ -505,17 +768,44 @@ class Engine:
         cache = dict(self.cache)
         cache["pos"] = self._replicate(jnp.asarray(pos, jnp.int32))
         token = self._replicate(token)
-        logits, self.cache = self._decode(self.params, cache, token,
-                                          self._replicate(pool_cfg))
+        try:
+            if inj is not None:
+                inj.check_step_fail()
+            logits, new_cache = self._decode(self.params, cache, token,
+                                             self._replicate(pool_cfg))
+            if inj is not None:
+                logits = inj.corrupt_logits(logits, active)
+        except Exception as err:  # noqa: BLE001 — any decode failure
+            # enters the retry path; the cause is kept in last_error
+            self._record_failure(active, now, err)
+            return True
+        # NaN/Inf guard BEFORE the cache commits and BEFORE the
+        # scheduler sees the logits: a corrupted step must neither
+        # poison the shared pool nor pollute probe feedback.  Rollback
+        # is free — self.cache still holds the pre-step state — and the
+        # slot's token is simply re-decoded next tick.
+        rows = np.asarray(logits)
+        bad = [i for i in active if not np.isfinite(rows[i]).all()]
+        if bad:
+            self._quarantine(bad, pool_cfg)
+            return True
+        self.cache = new_cache
+        self._retry_streak = 0
         self.n_decode_steps += 1
         # one token comes out of every active slot this tick
         self._count_energy(len(active), pool_cfg)
+        # drop_probe/dup_probe chaos: scheduler feedback is delivered
+        # 0, 1 or 2 times — the control loop must tolerate lost and
+        # at-least-once telemetry
+        feedback = 1 if inj is None else inj.probe_multiplicity()
         if self.scheduler is not None:
-            # shadow probe: `cache` still holds the PRE-step state, so
-            # the scheduler can re-run this exact step at the exact
-            # config through the same executable and score agreement
-            self.scheduler.on_step(self, active, cache, token, logits,
-                                   pool_cfg)
+            for _ in range(feedback):
+                # shadow probe: `cache` still holds the PRE-step state,
+                # so the scheduler can re-run this exact step at the
+                # exact config through the same executable and score
+                # agreement
+                self.scheduler.on_step(self, active, cache, token,
+                                       logits, pool_cfg)
         self.rng, k = jax.random.split(self.rng)
         # per-slot temperatures (sampling.sample takes one scalar): rows
         # at temperature t sample categorically from logits/t, rows at
@@ -540,21 +830,212 @@ class Engine:
             if (len(req.tokens) >= req.max_new_tokens
                     or self.slot_pos[i] >= self.max_len - 1):
                 req.done = True
+                req.status = "done"
                 req.finished_at = self.clock()
                 # repro-lint: disable=bounded-state — completed holds the run()'s return payload, one entry per submitted request; bounding it would silently drop finished results
                 self.completed.append(req)
                 self.slots[i] = None
+                self._nan_strikes[i] = 0
+        if (self.snapshot_every and self.checkpointer is not None
+                and self.n_decode_steps % self.snapshot_every == 0):
+            self.save_snapshot()
         if self.scheduler is not None:
             self.scheduler.on_tick(self)
         return True
 
-    def run(self, max_ticks: int = 10000):
+    # -- failure handling (PR 7) -----------------------------------------
+    def _record_failure(self, active: list[int], now: float,
+                        err: Exception) -> None:
+        """A decode attempt failed before any state was committed:
+        charge a retry to every in-flight request (the pool steps
+        together, so attribution to one slot is impossible), evict
+        requests past ``max_retries`` as failed, and open a capped
+        exponential backoff window with deterministic jitter (seeded
+        by the engine seed and the failure ordinal — replayable, yet
+        de-synchronized across engines with different seeds)."""
+        self.n_retries += 1
+        self._retry_streak += 1
+        self.last_error = repr(err)
+        for i in active:
+            req = self.slots[i]
+            if req is None:
+                continue
+            req.retries += 1
+            if req.retries > self.max_retries:
+                self._evict(i, "failed")
+        back = min(self.retry_cap_s,
+                   self.retry_base_s * 2.0 ** (self._retry_streak - 1))
+        jitter = float(np.random.default_rng(
+            (self._jitter_seed, self.n_retries)).uniform(0.0, 0.1 * back))
+        self._backoff_until = now + back + jitter
+
+    def _quarantine(self, bad: list[int], pool_cfg: np.ndarray) -> None:
+        """Respond to non-finite decode logits: the step is already
+        rolled back (cache uncommitted); step the likeliest-offending
+        config ONE notch toward exact — through the scheduler's
+        quarantine path when one is attached (same one-notch
+        hysteresis as probe backoff, so the two responses can't fight),
+        else directly on the engine/slot config — and strike the bad
+        slots.  A slot out of strikes means the corruption survives
+        config changes (poisoned cache state): restore the last
+        snapshot when one exists, else evict the slot as failed."""
+        self.n_nan_events += 1
+        self.n_quarantined += len(bad)
+        if self.scheduler is not None and np.any(np.asarray(pool_cfg)):
+            self.scheduler.quarantine(pool_cfg)
+        elif np.any(self.approx_cfg):
+            self.set_approx_cfg(self._step_toward_exact(self.approx_cfg))
+        for i in bad:
+            if self.slot_pinned[i] and np.any(self.slot_cfg[i]):
+                self.slot_cfg[i] = self._step_toward_exact(
+                    self.slot_cfg[i])
+            self._nan_strikes[i] += 1
+        if any(self._nan_strikes[i] > self.nan_max_strikes for i in bad):
+            if (self.checkpointer is not None
+                    and self._last_snapshot is not None):
+                self.restore_snapshot(self._last_snapshot)
+                return
+            for i in bad:
+                if self._nan_strikes[i] > self.nan_max_strikes:
+                    self._evict(i, "failed")
+
+    @staticmethod
+    def _step_toward_exact(cfg_vec: np.ndarray) -> np.ndarray:
+        """One-notch quarantine response without a scheduler: step the
+        highest-measured-MRED non-exact cell down one probe config
+        (``controller.step_down_config`` — the repo's single backoff
+        rule)."""
+        vec = np.asarray(cfg_vec).copy()
+        flat = vec.reshape(-1)
+        nonzero = flat > 0
+        if not nonzero.any():
+            return vec
+        mred = _mred_table()
+        worst = int(np.argmax(np.where(nonzero, mred[flat], -np.inf)))
+        flat[worst] = step_down_config(int(flat[worst]),
+                                       list(range(1, N_CONFIGS)))
+        return vec
+
+    def run(self, max_ticks: int = 10000, *, preemption=None):
+        """Tick until the queue and slots drain (or ``max_ticks``).
+
+        preemption: an optional ``dist.fault_tolerance
+        .PreemptionHandler`` (or anything with a ``preempted`` flag).
+        Once it trips, the engine drains gracefully: admission stops
+        (queued-but-unadmitted work is left queued), and in-flight
+        slots either finish normally or — when a checkpointer is
+        attached — are snapshot immediately so a successor engine
+        resumes them mid-stream bit-identically."""
         ticks = 0
-        while (self.queue or any(s is not None for s in self.slots)) \
+        while ((bool(self.queue) and not self._draining)
+               or any(s is not None for s in self.slots)) \
                 and ticks < max_ticks:
+            if preemption is not None and preemption.preempted:
+                self.drain()
+            if self._draining and self.checkpointer is not None:
+                self.save_snapshot()
+                break
             self.step()
             ticks += 1
         return self.completed
+
+    # -- snapshot / restore (PR 7) ---------------------------------------
+    def _snapshot_arrays(self) -> dict:
+        """The array half of a snapshot (Checkpointer leaves must be
+        arrays): KV cache, config tensors, per-slot numpy state, and
+        the sampler key — everything token generation depends on."""
+        return {"cache": jax.tree.map(np.asarray, self.cache),
+                "approx_cfg": self.approx_cfg,
+                "slot_cfg": self.slot_cfg,
+                # int32 on disk: positions/strikes fit comfortably, and
+                # restore's jnp round-trip would truncate int64 anyway
+                "slot_pos": self.slot_pos.astype(np.int32),
+                "slot_pinned": self.slot_pinned,
+                "nan_strikes": self._nan_strikes.astype(np.int32),
+                "rng": np.asarray(self.rng)}
+
+    _SNAP_COUNTERS = ("n_decode_steps", "n_prefill_tokens",
+                      "mac_energy_pj_per_param",
+                      "exact_energy_pj_per_param", "n_tokens_charged",
+                      "n_rejected", "n_expired", "n_failed", "n_retries",
+                      "n_nan_events", "n_quarantined")
+    # fault counters never roll back: an in-process restore (self-heal)
+    # keeps what this engine lived through; only serving ACCOUNTING
+    # (steps/tokens/energy) rewinds with the state it describes
+    _MONOTONE_COUNTERS = frozenset(
+        {"n_rejected", "n_expired", "n_failed", "n_retries",
+         "n_nan_events", "n_quarantined"})
+
+    def save_snapshot(self, step: int | None = None) -> int:
+        """Persist the full serving state through the attached
+        ``checkpoint.Checkpointer`` (atomic dir-rename, bounded
+        retention).  Requests (slots, queue, completed) travel in the
+        msgpack metadata; arrays in the npz tree.  Returns the step id
+        (monotonic snapshot ordinal by default)."""
+        assert self.checkpointer is not None, \
+            "Engine(checkpointer=...) required for snapshots"
+        self.n_snapshots += 1
+        step = self.n_snapshots if step is None else int(step)
+        meta = {"slots": [_pack_request(r) for r in self.slots],
+                "queue": [_pack_request(r) for r in self.queue],
+                "completed": [_pack_request(r) for r in self.completed],
+                "counters": {k: getattr(self, k)
+                             for k in self._SNAP_COUNTERS}}
+        self.checkpointer.save(step, self._snapshot_arrays(), meta)
+        self._last_snapshot = step
+        return step
+
+    def restore_snapshot(self, step: int | None = None) -> None:
+        """Load a snapshot (latest by default) into this engine —
+        models/executables are untouched, so the restored engine
+        decodes through the exact compiled functions it already has;
+        the continuation is bit-identical to the uninterrupted run
+        (tests/test_resilience.py).  Also the self-healing path for
+        persistent cache corruption (see _quarantine)."""
+        assert self.checkpointer is not None, \
+            "Engine(checkpointer=...) required for snapshots"
+        tree, meta = self.checkpointer.restore(self._snapshot_arrays(),
+                                               step)
+        cache = tree["cache"]
+        if self.mapping is not None:
+            cache = jax.device_put(cache, self._cache_sh)
+        self.cache = cache
+        # np.array copies: the restored leaves are jnp (read-only
+        # views under np.asarray) and the slot state must stay mutable
+        self.approx_cfg = np.array(tree["approx_cfg"], dtype=np.int32)
+        self.slot_cfg = np.array(tree["slot_cfg"], dtype=np.int32)
+        self.slot_pos = np.array(tree["slot_pos"], dtype=np.int64)
+        self.slot_pinned = np.array(tree["slot_pinned"], dtype=bool)
+        self._nan_strikes = np.array(tree["nan_strikes"],
+                                     dtype=np.int64)
+        self.rng = jnp.asarray(np.asarray(tree["rng"]), jnp.uint32)
+        self.slots = [_unpack_request(d) for d in meta["slots"]]
+        self.queue.clear()
+        self.queue.extend(_unpack_request(d) for d in meta["queue"])
+        self.completed = [_unpack_request(d) for d in meta["completed"]]
+        for k, v in meta["counters"].items():
+            if k in self._MONOTONE_COUNTERS:
+                v = max(v, getattr(self, k))
+            setattr(self, k, v)
+        self._retry_streak = 0
+        self._backoff_until = 0.0
+        self.n_restores += 1
+
+    def resilience_report(self) -> dict:
+        """Lifetime fault/SLO counters plus the live backpressure
+        signal — the dashboard row BENCH_resilience.json is built
+        from."""
+        from collections import Counter
+        return {"rejected": self.n_rejected, "expired": self.n_expired,
+                "failed": self.n_failed, "retries": self.n_retries,
+                "nan_events": self.n_nan_events,
+                "quarantined": self.n_quarantined,
+                "snapshots": self.n_snapshots,
+                "restores": self.n_restores,
+                "last_error": self.last_error,
+                "statuses": dict(Counter(r.status
+                                         for r in self.completed)),
+                "backpressure": self.backpressure}
 
     # -- paper-knob reporting --------------------------------------------
     @property

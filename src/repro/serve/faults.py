@@ -1,0 +1,202 @@
+"""Deterministic fault injection for the serving engine (DESIGN.md §10).
+
+Chaos testing only earns its keep when a failure found once can be
+replayed forever: every fault here is a ``FaultEvent`` pinned to an
+engine TICK (not a wall-clock instant), the plan is sorted and applied
+by an internal tick counter, and the one random knob (which slot a
+plan-less event hits) derives from ``(seed, tick)`` — so a chaos
+scenario is a pure function of ``(plan, seed)`` and a failing seed is a
+regression test, not an anecdote.
+
+Fault kinds (the rows of DESIGN.md §10's fault-model table):
+
+  nan_logits   corrupt the decode logits of a slot (or all active
+               slots) with ``value`` (NaN/Inf) AFTER the jitted step —
+               models an aggressive-config numeric blowup surfacing in
+               the output.  Caught by the engine's NaN/Inf guard before
+               the cache commits, so recovery is a free rollback.
+  nan_cache    poison a slot's KV rows in the POOL cache before the
+               step — models silent state corruption.  Rollback cannot
+               help (the poisoned state IS the rollback target); this
+               is the scenario snapshot/restore exists for.
+  step_fail    raise ``InjectedFault`` in place of the decode call —
+               models a device/runtime error.  Exercises the engine's
+               retry + capped-exponential-backoff path.
+  clock_skew   add ``skew_s`` to every subsequent reading of the
+               engine's injected clock — models clock drift; deadlines
+               must fire from skewed time, not tick counts.
+  stall        one-tick straggler: jump the clock forward ``stall_s``
+               as if the tick took that long — models a slow device.
+               Distinct from clock_skew only in intent (latency, not
+               drift); SLO eviction is the response either way.
+  drop_probe   suppress this tick's scheduler feedback (``on_step`` is
+               skipped once) — models lost telemetry.
+  dup_probe    deliver this tick's scheduler feedback twice — models
+               at-least-once telemetry.  The scheduler's EWMA estimates
+               must tolerate both without diverging.
+
+The injector touches the engine only through documented surfaces
+(``engine.cache``, the clock wrapper, the ``begin_tick`` /
+``check_step_fail`` / ``corrupt_logits`` / ``probe_multiplicity``
+hooks ``Engine._step`` calls) — it never reaches into the jitted
+functions, so an injected run compiles EXACTLY the executables an
+uninjected run does (zero retraces under chaos is asserted in
+tests/test_resilience.py and the resilience benchmark).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KINDS = ("nan_logits", "nan_cache", "step_fail", "clock_skew", "stall",
+         "drop_probe", "dup_probe")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by ``step_fail`` events in place of the decode call."""
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: ``kind`` fires at engine tick ``tick``.
+
+    slot: target decode slot for nan_logits/nan_cache; None hits every
+        active slot (nan_logits) or slot 0 (nan_cache).
+    value: the corruption payload (default NaN; pass ``float("inf")``
+        to exercise the Inf side of the guard).
+    skew_s: seconds added to the injected clock (clock_skew).
+    stall_s: seconds the stalled tick appears to take (stall).
+    """
+    tick: int
+    kind: str
+    slot: int | None = None
+    value: float = float("nan")
+    skew_s: float = 0.0
+    stall_s: float = 0.0
+
+    def __post_init__(self):
+        assert self.kind in KINDS, f"unknown fault kind {self.kind!r}"
+        assert self.tick >= 0, self.tick
+
+
+class FaultInjector:
+    """Replays a sorted ``FaultEvent`` plan against a live engine.
+
+    Pass as ``Engine(fault_injector=...)``: the engine wraps its
+    injected clock with ``wrap_clock`` and calls the tick hooks in a
+    fixed order (begin_tick → check_step_fail → corrupt_logits →
+    probe_multiplicity).  ``log`` is a bounded audit window of fired
+    events; ``counts`` carries the lifetime totals per kind.
+    """
+
+    def __init__(self, plan: Iterable[FaultEvent], seed: int = 0):
+        self.plan = sorted(plan, key=lambda e: (e.tick, KINDS.index(e.kind)))
+        # events fire when DUE (plan tick reached), at the first hook
+        # that can deliver them — a tick spent in a backoff window
+        # defers its faults rather than silently dropping them
+        self._remaining = list(self.plan)
+        self.seed = int(seed)
+        self.tick = -1                  # begin_tick increments first
+        self.skew_s = 0.0
+        self.counts = {k: 0 for k in KINDS}
+        self.log: deque[tuple[int, str]] = deque(maxlen=4096)
+
+    # -- clock -----------------------------------------------------------
+    def wrap_clock(self, clock: Callable[[], float]) -> Callable[[], float]:
+        """Skew-aware view of the engine's injected clock: clock_skew
+        and stall events shift every subsequent reading, so deadline
+        and backoff logic sees the faulted time without the engine ever
+        reading an ambient wall clock."""
+        def skewed() -> float:
+            return clock() + self.skew_s
+        return skewed
+
+    # -- tick hooks (called by Engine._step, in this order) --------------
+    def begin_tick(self, engine) -> None:
+        """Advance to the next tick and apply its pre-step faults:
+        clock skew / stall (time shifts) and cache poisoning."""
+        self.tick += 1
+        for e in self._pending("clock_skew"):
+            self.skew_s += e.skew_s
+            self._fire(e)
+        for e in self._pending("stall"):
+            self.skew_s += e.stall_s
+            self._fire(e)
+        for e in self._pending("nan_cache"):
+            self._poison_cache(engine, e)
+            self._fire(e)
+
+    def check_step_fail(self) -> None:
+        for e in self._pending("step_fail"):
+            self._fire(e)
+            raise InjectedFault(
+                f"injected decode failure at tick {self.tick}")
+
+    def corrupt_logits(self, logits, active: list[int]):
+        """Overwrite the logits rows of the targeted slots with the
+        event's payload — a host-side round-trip on purpose: the jitted
+        decode's output is corrupted, never its trace."""
+        events = self._pending("nan_logits")
+        if not events:
+            return logits
+        rows = np.asarray(logits).copy()
+        for e in events:
+            targets = active if e.slot is None else [e.slot]
+            for s in targets:
+                rows[s] = e.value
+            self._fire(e)
+        return jnp.asarray(rows)
+
+    def probe_multiplicity(self) -> int:
+        """How many times this tick's scheduler feedback is delivered:
+        1 normally, 0 under drop_probe, 2 under dup_probe (drop wins
+        when both fire — the duplicate of a dropped message is still
+        dropped)."""
+        mult = 1
+        for e in self._pending("dup_probe"):
+            mult = 2
+            self._fire(e)
+        for e in self._pending("drop_probe"):
+            mult = 0
+            self._fire(e)
+        return mult
+
+    # -- internals -------------------------------------------------------
+    def _pending(self, kind: str) -> list[FaultEvent]:
+        return [e for e in self._remaining
+                if e.tick <= self.tick and e.kind == kind]
+
+    def _fire(self, e: FaultEvent) -> None:
+        self._remaining.remove(e)
+        self.counts[e.kind] += 1
+        self.log.append((self.tick, e.kind))
+
+    def _poison_cache(self, engine, e: FaultEvent) -> None:
+        """Overwrite one slot's rows of every KV pool buffer with the
+        payload.  Cache leaves under ``cache["scan"]`` are stacked
+        (layers_in_block, batch, seq, kv_heads, head_dim) — batch is
+        axis 1 (the axis ``_splice_cache`` writes)."""
+        slot = 0 if e.slot is None else int(e.slot)
+        assert 0 <= slot < engine.max_batch, (slot, engine.max_batch)
+
+        def poison(leaf):
+            if getattr(leaf, "ndim", 0) < 2:
+                return leaf
+            assert leaf.shape[1] == engine.max_batch, leaf.shape
+            return leaf.at[:, slot].set(e.value)
+
+        cache = dict(engine.cache)
+        cache["scan"] = jax.tree.map(poison, cache["scan"])
+        engine.cache = cache
+        if engine.mapping is not None:
+            engine.cache = jax.device_put(engine.cache, engine._cache_sh)
+
+    def report(self) -> dict:
+        return {"ticks": self.tick + 1, "skew_s": self.skew_s,
+                "counts": dict(self.counts),
+                "fired": sum(self.counts.values())}

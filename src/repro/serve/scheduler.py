@@ -176,6 +176,10 @@ class PowerBudgetScheduler:
                  seed: int = 0):
         assert 0 < probe_every and 0 < retune_every
         self.budget_pj_per_token = float(budget_pj_per_token)
+        # brownout composition (DESIGN.md §10): an external degradation
+        # controller scales the budget instead of writing configs — one
+        # writer per knob, the planner keeps its feedback state
+        self.budget_scale = 1.0
         self.retune_every = int(retune_every)
         self.probe_every = int(probe_every)
         self.probe_configs = [c for c in probe_configs
@@ -279,7 +283,7 @@ class PowerBudgetScheduler:
         disagreement budget 1 - agreement_target is spent), then
         step-down refinement while the budget still holds."""
         assert self.shape is not None, "bind()/attach() first"
-        budget = self.budget_pj_per_token
+        budget = self.budget_pj_per_token * self.budget_scale
         cands = [Candidate(k, c, self._delta(k, c),
                            float(MAC_SAVING_FRAC[c]))
                  for k in self.keys for c in self._ladder(k)]
@@ -469,16 +473,36 @@ class PowerBudgetScheduler:
             "window_agreement": agree,
             "assignment": self._tensor(assignment).tolist()})
 
+    def quarantine(self, executed_cfg) -> None:
+        """Immediate one-notch backoff — the engine's NaN/Inf guard
+        path (DESIGN.md §10).  Non-finite decode output is a far
+        stronger signal than a probe disagreement, so it skips the
+        hysteresis streak and backs the offending executed key off NOW
+        (same ``_backoff`` rule: one notch, held, estimate charged).
+        The engine rolls the corrupted step back itself; this hook only
+        moves the config policy."""
+        self._backoff(np.asarray(executed_cfg))
+        self._streak = 0
+
     # -- reporting -------------------------------------------------------
     def set_budget(self, budget_pj_per_token: float) -> None:
         """Retarget the loop live (takes effect at the next retune)."""
         self.budget_pj_per_token = float(budget_pj_per_token)
+
+    def set_budget_scale(self, scale: float) -> None:
+        """Brownout hook: multiply the effective budget by ``scale``
+        (1.0 = no brownout) from the next retune on.  Scaling — rather
+        than overwriting — the budget keeps ``set_budget`` retargets
+        and brownout pressure composable in either order."""
+        assert 0.0 < scale <= 1.0, scale
+        self.budget_scale = float(scale)
 
     def report(self) -> dict[str, Any]:
         retunes = [h for h in self.history if h["event"] == "retune"]
         last = retunes[-1] if retunes else {}
         return {
             "budget_pj_per_token": self.budget_pj_per_token,
+            "budget_scale": self.budget_scale,
             "modeled_pj_per_token": (self._energy_pj(self.assignment)
                                      if self.shape else None),
             "measured_pj_per_token": last.get("measured_pj_per_token"),

@@ -1,0 +1,134 @@
+"""Replayable bursty traffic for the serving engine (DESIGN.md §10).
+
+Arrival streams for chaos/robustness experiments must be replayable
+the same way faults are: ``TrafficGenerator.arrivals(tick)`` is a pure
+function of ``(seed, tick)`` — the per-tick PRNG is
+``np.random.default_rng((seed, tick))``, so tick 37's arrivals are the
+same whether the whole trace is replayed or the generator is asked for
+that one tick, and a chaos scenario (traffic + fault plan) is fully
+pinned by two seeds.
+
+Load shape: per-tick Poisson arrivals at ``rate_per_tick``, multiplied
+by any active ``(start_tick, end_tick, multiplier)`` spike window —
+the classic base-load-plus-burst shape SLO studies use.  Each arrival
+draws a ``TrafficClass`` (weighted), which fixes its prompt length,
+decode budget, and the TTFT/e2e SLOs the engine's deadline eviction
+enforces.  ``slo_report`` scores a finished run per class — the
+availability / attainment numbers BENCH_resilience.json reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .engine import Request
+
+
+@dataclass(frozen=True)
+class TrafficClass:
+    """One request class: its size and its service-level objectives.
+
+    SLOs are in injected-clock seconds (None = no deadline); weight is
+    the class's relative share of arrivals."""
+    name: str
+    ttft_slo_s: float | None = None
+    e2e_slo_s: float | None = None
+    prompt_len: int = 8
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    weight: float = 1.0
+
+
+class TrafficGenerator:
+    """Seeded Poisson/spike arrival process over weighted classes.
+
+    classes: the TrafficClass mix (weights need not sum to 1).
+    rate_per_tick: base mean arrivals per engine tick.
+    spikes: ``(start_tick, end_tick, multiplier)`` windows; a tick in
+        [start, end) multiplies the base rate (overlaps compound).
+    vocab_size: prompts are uniform token draws from [1, vocab_size).
+    seed: the replay key — same seed, same trace, any access order.
+    """
+
+    def __init__(self, classes: Sequence[TrafficClass], *,
+                 rate_per_tick: float = 1.0, seed: int = 0,
+                 vocab_size: int = 64,
+                 spikes: Iterable[tuple[int, int, float]] = ()):
+        assert classes, "need at least one TrafficClass"
+        self.classes = tuple(classes)
+        self.rate_per_tick = float(rate_per_tick)
+        self.seed = int(seed)
+        self.vocab_size = int(vocab_size)
+        self.spikes = tuple((int(a), int(b), float(m))
+                            for a, b, m in spikes)
+        w = np.asarray([c.weight for c in self.classes], np.float64)
+        assert (w > 0).all(), "class weights must be positive"
+        self._p = w / w.sum()
+
+    def rate_at(self, tick: int) -> float:
+        rate = self.rate_per_tick
+        for start, end, mult in self.spikes:
+            if start <= tick < end:
+                rate *= mult
+        return rate
+
+    def arrivals(self, tick: int) -> list[Request]:
+        """The requests arriving at ``tick`` — deterministic in
+        ``(seed, tick)`` alone.  rids encode ``(tick, index)`` so every
+        request in a trace is globally unique and self-describing."""
+        rng = np.random.default_rng((self.seed, tick))
+        n = int(rng.poisson(self.rate_at(tick)))
+        out = []
+        for i in range(n):
+            c = self.classes[int(rng.choice(len(self.classes), p=self._p))]
+            prompt = rng.integers(1, self.vocab_size, size=c.prompt_len,
+                                  dtype=np.int64).astype(np.int32)
+            out.append(Request(
+                rid=(tick << 16) | i, prompt=prompt,
+                max_new_tokens=c.max_new_tokens,
+                temperature=c.temperature,
+                ttft_slo_s=c.ttft_slo_s, e2e_slo_s=c.e2e_slo_s,
+                cls=c.name))
+        return out
+
+
+def slo_report(requests: Iterable[Request]) -> dict:
+    """Per-class and overall service scorecard over a finished run.
+
+    availability = served / offered (rejected + expired count against
+    it); slo_attainment = among SERVED requests, the fraction whose
+    stamps met their class SLOs (no-deadline classes trivially
+    attain)."""
+    per_cls: dict[str, dict] = {}
+    for r in requests:
+        row = per_cls.setdefault(r.cls, {
+            "offered": 0, "served": 0, "rejected": 0, "expired": 0,
+            "failed": 0, "slo_met": 0})
+        row["offered"] += 1
+        if r.status in ("rejected", "expired", "failed"):
+            row[r.status] += 1
+            continue
+        row["served"] += 1
+        ok = True
+        if (r.ttft_slo_s is not None and r.first_token_at is not None
+                and r.submitted_at is not None):
+            ok &= r.first_token_at - r.submitted_at <= r.ttft_slo_s
+        if (r.e2e_slo_s is not None and r.finished_at is not None
+                and r.submitted_at is not None):
+            ok &= r.finished_at - r.submitted_at <= r.e2e_slo_s
+        row["slo_met"] += int(ok)
+    total = {k: sum(row[k] for row in per_cls.values())
+             for k in ("offered", "served", "rejected", "expired",
+                       "failed", "slo_met")}
+    def _rates(row):
+        served = row["served"]
+        return dict(row,
+                    availability=(row["served"] / row["offered"]
+                                  if row["offered"] else 1.0),
+                    slo_attainment=(row["slo_met"] / served
+                                    if served else 1.0))
+    return {"classes": {name: _rates(row)
+                        for name, row in sorted(per_cls.items())},
+            "total": _rates(total)}

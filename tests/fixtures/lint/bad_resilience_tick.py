@@ -1,0 +1,21 @@
+# repro-lint: scope=src/repro/serve/faults.py
+"""BAD: unbounded fault-audit state on the chaos tick path (rule:
+bounded-state) — PR 7 extended TICK_METHODS with the injector's
+``begin_tick`` and the traffic generator's ``arrivals``."""
+
+
+class FaultInjector:
+    def __init__(self):
+        self.fired = []                # bare list
+
+    def begin_tick(self, engine):
+        self.fired.append(engine)      # grows forever under chaos
+
+
+class TrafficGenerator:
+    def __init__(self):
+        self.trace = []
+
+    def arrivals(self, tick):
+        self.trace.append(tick)        # every tick of the whole run
+        return []

@@ -1,0 +1,20 @@
+# repro-lint: scope=src/repro/serve/faults.py
+"""GOOD: bounded audit windows on the chaos tick path; the arrival
+stream is recomputed from (seed, tick), never accumulated."""
+from collections import deque
+
+
+class FaultInjector:
+    def __init__(self):
+        self.fired = deque(maxlen=4096)
+
+    def begin_tick(self, engine):
+        self.fired.append(engine)
+
+
+class TrafficGenerator:
+    def __init__(self):
+        self.seed = 0
+
+    def arrivals(self, tick):
+        return [(self.seed, tick)]     # pure function, no trace kept

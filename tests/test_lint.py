@@ -26,11 +26,13 @@ BAD = {
     "bad_cfg_shape": "cfg-shape",                 # historical: retrace
     "bad_single_rounding": "single-rounding",     # historical: PR 3
     "bad_bounded_state": "bounded-state",
+    "bad_resilience_tick": "bounded-state",       # PR 7 chaos tick path
     "bad_injected_clock": "injected-clock",       # historical: PR 4
     "bad_pallas_hygiene": "pallas-hygiene",
 }
 GOOD = ["good_trace_safety", "good_cfg_shape", "good_single_rounding",
-        "good_bounded_state", "good_injected_clock", "good_pallas_hygiene",
+        "good_bounded_state", "good_resilience_tick",
+        "good_injected_clock", "good_pallas_hygiene",
         "good_suppression"]
 
 

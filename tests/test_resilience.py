@@ -1,0 +1,522 @@
+"""Chaos-hardened serving (PR 7 tentpole, DESIGN.md §10).
+
+Contract: every injected fault is DETECTED, the response is bounded
+(rollback / retry / quarantine / snapshot-restore / rejection), chaos
+runs compile ZERO extra executables, and recovery is bit-identical to
+an uninjected run wherever the fault left no policy change behind.
+Everything here runs on a deterministic FakeClock and a seeded
+``FaultInjector`` — a failing scenario is a replayable seed, not an
+anecdote.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.power_model import MAC_SAVING_FRAC
+from repro.dist.fault_tolerance import PreemptionHandler
+from repro.serve.brownout import BrownoutController
+from repro.serve.engine import Engine, Request
+from repro.serve.faults import FaultEvent, FaultInjector, InjectedFault
+from repro.serve.scheduler import PowerBudgetScheduler
+from repro.serve.traffic import TrafficClass, TrafficGenerator, slo_report
+
+
+def _small_model():
+    from repro.nn import transformer as T
+    cfg = T.ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                        head_dim=16, d_ff=64, vocab_size=64,
+                        scan_layers=False, remat=False, q_chunk=8,
+                        loss_chunks=1, compute_dtype=jnp.float32)
+    params, _ = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return T, cfg, params
+
+
+class FakeClock:
+    """Deterministic injected time source: each read advances 1 ms."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1e-3
+        return self.t
+
+
+def _prompt(lo, n=5):
+    return np.arange(lo, lo + n, dtype=np.int32)
+
+
+def _tokens(completed):
+    return sorted((r.rid, tuple(r.tokens)) for r in completed
+                  if r.status == "done")
+
+
+# --- shared-pool isolation (the splice regression) --------------------------
+
+def test_batched_decode_matches_solo():
+    """Each slot's continuation must equal its solo run: the pre-PR-7
+    ``_splice_cache`` indexed the LAYER axis instead of the batch axis,
+    so one request's prefill rows silently corrupted every other
+    in-flight request's cache (and solo engines never wrote layer 1 at
+    all).  Pinned here for good."""
+    T, cfg, params = _small_model()
+
+    def solo(prompt):
+        e = Engine(params, cfg, max_batch=1, max_len=48)
+        e.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+        return [tuple(r.tokens) for r in e.run()][0]
+
+    eng = Engine(params, cfg, max_batch=2, max_len=48)
+    eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=6))
+    eng.submit(Request(rid=1, prompt=_prompt(10), max_new_tokens=6))
+    both = {r.rid: tuple(r.tokens) for r in eng.run()}
+    assert both[0] == solo(_prompt(0))
+    assert both[1] == solo(_prompt(10))
+
+
+# --- bounded admission ------------------------------------------------------
+
+def test_queue_overflow_rejects_explicitly():
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, queue_capacity=2, clock=FakeClock())
+    reqs = [Request(rid=i, prompt=_prompt(i)) for i in range(3)]
+    assert eng.submit(reqs[0]) and eng.submit(reqs[1])
+    assert not eng.submit(reqs[2])
+    assert reqs[2].status == "rejected"
+    assert eng.n_rejected == 1 and len(eng.queue) == 2
+    bp = eng.backpressure
+    assert bp["queued"] == 2 and bp["utilization"] == 1.0
+    assert bp["rejected"] == 1
+
+
+# --- deadlines --------------------------------------------------------------
+
+def test_ttft_deadline_expires_queued_request():
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, max_batch=1, clock=FakeClock())
+    eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=8))
+    # slot-starved behind rid 0; its TTFT budget (5 ms = 5 clock
+    # reads) burns down while it waits in the queue
+    late = Request(rid=1, prompt=_prompt(10), max_new_tokens=8,
+                   ttft_slo_s=0.005)
+    eng.submit(late)
+    done = eng.run()
+    assert late.status == "expired" and late.tokens == []
+    assert eng.n_expired == 1
+    assert {r.rid for r in done if r.status == "done"} == {0}
+
+
+def test_e2e_deadline_evicts_active_slot():
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, max_batch=1, clock=FakeClock())
+    req = Request(rid=0, prompt=_prompt(0), max_new_tokens=10_000,
+                  e2e_slo_s=0.05)
+    eng.submit(req)
+    eng.run(max_ticks=500)
+    assert req.status == "expired"
+    assert req.tokens, "should have decoded before the deadline hit"
+    assert req.finished_at - req.submitted_at > 0.05
+    assert eng.slots == [None]
+
+
+# --- NaN/Inf guard ----------------------------------------------------------
+
+@pytest.mark.parametrize("payload", [float("nan"), float("inf")])
+def test_nan_guard_rollback_is_bit_identical(payload):
+    """Transient logits corruption at the exact config: the guard rolls
+    the step back (cache uncommitted, rng untouched) and re-decodes next
+    tick — the finished tokens must equal an uninjected run's, with
+    zero extra compiled executables."""
+    T, cfg, params = _small_model()
+
+    def run(inj):
+        eng = Engine(params, cfg, max_batch=2, max_len=64,
+                     clock=FakeClock(), fault_injector=inj)
+        eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=8))
+        eng.submit(Request(rid=1, prompt=_prompt(10), max_new_tokens=8))
+        done = eng.run()
+        return eng, _tokens(done)
+
+    _, want = run(None)
+    inj = FaultInjector([FaultEvent(tick=2, kind="nan_logits",
+                                    value=payload),
+                         FaultEvent(tick=4, kind="nan_logits", slot=1,
+                                    value=payload)])
+    eng, got = run(inj)
+    assert got == want
+    assert eng.n_nan_events == 2 and eng.n_quarantined == 3
+    assert inj.counts["nan_logits"] == 2
+    assert eng._decode._cache_size() == 1
+    assert eng._prefill._cache_size() == 1
+
+
+def test_nan_quarantine_steps_config_toward_exact():
+    """At an aggressive config the guard must also move POLICY: one
+    cell steps one notch toward exact (strictly lower saving) per
+    event — the paper's knob as the recovery axis."""
+    T, cfg, params = _small_model()
+    inj = FaultInjector([FaultEvent(tick=3, kind="nan_logits")])
+    eng = Engine(params, cfg, max_batch=1, approx_cfg=31,
+                 clock=FakeClock(), fault_injector=inj)
+    before = eng.approx_cfg.copy()
+    eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=8))
+    done = eng.run()
+    assert eng.n_nan_events == 1
+    assert (MAC_SAVING_FRAC[eng.approx_cfg].sum()
+            < MAC_SAVING_FRAC[before].sum())
+    assert done[0].status == "done"
+    assert all(np.isfinite(done[0].tokens).all() for _ in [0])
+
+
+def test_nan_quarantine_uses_scheduler_backoff_when_attached():
+    """With a scheduler attached the guard routes through
+    ``scheduler.quarantine`` — the SAME one-notch ``_backoff`` rule as
+    probe hysteresis, so the two responses cannot fight."""
+    T, cfg, params = _small_model()
+    sched = PowerBudgetScheduler(10.0, probe_every=10**9,
+                                 retune_every=10**9)
+    inj = FaultInjector([FaultEvent(tick=3, kind="nan_logits")])
+    eng = Engine(params, cfg, max_batch=1, approx_cfg=8, scheduler=sched,
+                 clock=FakeClock(), fault_injector=inj)
+    eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=8))
+    eng.run()
+    assert sched.n_backoffs == 1
+    assert any(h["event"] == "backoff" for h in sched.history)
+    # the backoff wrote the engine config: saving strictly dropped
+    assert (MAC_SAVING_FRAC[eng.approx_cfg].sum()
+            < 2 * MAC_SAVING_FRAC[8])
+
+
+# --- retry + backoff --------------------------------------------------------
+
+def test_step_failure_retries_then_recovers_bit_identically():
+    T, cfg, params = _small_model()
+
+    def run(inj):
+        eng = Engine(params, cfg, max_batch=2, clock=FakeClock(),
+                     fault_injector=inj, retry_base_s=1e-3,
+                     retry_cap_s=4e-3)
+        eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=8))
+        eng.submit(Request(rid=1, prompt=_prompt(10), max_new_tokens=8))
+        return eng, _tokens(eng.run(max_ticks=200))
+
+    _, want = run(None)
+    inj = FaultInjector([FaultEvent(tick=2, kind="step_fail"),
+                         FaultEvent(tick=3, kind="step_fail")])
+    eng, got = run(inj)
+    assert got == want
+    assert eng.n_retries == 2
+    assert "InjectedFault" in eng.last_error
+    assert all(r.retries == 2 for r in eng.completed)
+    assert eng._decode._cache_size() == 1
+
+
+def test_request_out_of_retries_is_failed():
+    T, cfg, params = _small_model()
+    inj = FaultInjector([FaultEvent(tick=1, kind="step_fail")])
+    eng = Engine(params, cfg, max_batch=1, clock=FakeClock(),
+                 fault_injector=inj, max_retries=0, retry_base_s=1e-3)
+    req = Request(rid=0, prompt=_prompt(0), max_new_tokens=8)
+    eng.submit(req)
+    eng.run(max_ticks=100)
+    assert req.status == "failed" and eng.n_failed == 1
+
+
+def test_retry_backoff_is_capped_exponential_with_deterministic_jitter():
+    T, cfg, params = _small_model()
+    clock = FakeClock()
+    eng = Engine(params, cfg, clock=clock, retry_base_s=0.01,
+                 retry_cap_s=0.03, seed=7)
+    waits = []
+    for _ in range(4):
+        now = clock.t
+        eng._record_failure([], now, RuntimeError("x"))
+        waits.append(eng._backoff_until - now)
+    # exponential then capped, each with ≤10% jitter on top
+    for w, base in zip(waits, [0.01, 0.02, 0.03, 0.03]):
+        assert base <= w <= base * 1.1 + 1e-12, (w, base)
+    # deterministic: same seed and failure ordinal → same jitter
+    eng2 = Engine(params, cfg, clock=FakeClock(), retry_base_s=0.01,
+                  retry_cap_s=0.03, seed=7)
+    eng2._record_failure([], 0.0, RuntimeError("x"))
+    assert eng2._backoff_until == pytest.approx(
+        waits[0], abs=0.0), "jitter must replay from (seed, ordinal)"
+
+
+# --- clock skew / stall -----------------------------------------------------
+
+def test_clock_skew_burns_deadlines_from_skewed_time():
+    """A 10 s skew jump must expire a queued request's TTFT budget even
+    though almost no ticks elapsed — deadlines fire from the injected
+    (faulted) clock, never from tick counts."""
+    T, cfg, params = _small_model()
+    inj = FaultInjector([FaultEvent(tick=2, kind="clock_skew",
+                                    skew_s=10.0)])
+    eng = Engine(params, cfg, max_batch=1, clock=FakeClock(),
+                 fault_injector=inj)
+    eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=32))
+    late = Request(rid=1, prompt=_prompt(10), ttft_slo_s=5.0)
+    eng.submit(late)
+    eng.run()
+    assert late.status == "expired"
+
+
+def test_stall_with_headroom_recovers_bit_identically():
+    """A straggler tick under generous SLOs: time jumps, nothing
+    expires, and the token stream is untouched."""
+    T, cfg, params = _small_model()
+
+    def run(inj):
+        eng = Engine(params, cfg, max_batch=1, clock=FakeClock(),
+                     fault_injector=inj)
+        eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=8,
+                           ttft_slo_s=60.0, e2e_slo_s=60.0))
+        return eng, _tokens(eng.run())
+
+    _, want = run(None)
+    eng, got = run(FaultInjector([FaultEvent(tick=3, kind="stall",
+                                             stall_s=2.0)]))
+    assert got == want and eng.n_expired == 0
+
+
+# --- snapshot / restore -----------------------------------------------------
+
+def test_snapshot_restore_resumes_bit_identically(tmp_path):
+    """Kill-and-resume: a fresh engine restoring mid-stream must finish
+    with exactly the uninterrupted run's tokens."""
+    T, cfg, params = _small_model()
+
+    def fresh(ck):
+        return Engine(params, cfg, max_batch=2, max_len=64,
+                      clock=FakeClock(), checkpointer=ck)
+
+    ck = Checkpointer(str(tmp_path / "snap"))
+    eng = fresh(ck)
+    eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=10))
+    eng.submit(Request(rid=1, prompt=_prompt(10), max_new_tokens=10))
+    for _ in range(4):
+        eng.step()
+    step = eng.save_snapshot()
+    mid = {r.rid: list(r.tokens)
+           for r in eng.slots if r is not None}
+    want = _tokens(eng.run())
+
+    eng2 = fresh(ck)
+    eng2.restore_snapshot(step)
+    assert {r.rid: list(r.tokens)
+            for r in eng2.slots if r is not None} == mid
+    assert eng2.n_decode_steps == 4
+    assert _tokens(eng2.run()) == want
+    assert eng2._decode._cache_size() == 1
+
+
+def test_nan_cache_self_heals_from_snapshot(tmp_path):
+    """Poisoned KV state is the fault rollback can't fix (the poisoned
+    cache IS the rollback target): the engine must detect the
+    persistent strikes and restore the last auto-snapshot — and the
+    finished tokens still match the uninjected run exactly."""
+    T, cfg, params = _small_model()
+
+    def run(inj, ck):
+        eng = Engine(params, cfg, max_batch=2, max_len=64,
+                     clock=FakeClock(), fault_injector=inj,
+                     checkpointer=ck, snapshot_every=2,
+                     nan_max_strikes=1)
+        eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=8))
+        eng.submit(Request(rid=1, prompt=_prompt(10), max_new_tokens=8))
+        return eng, _tokens(eng.run(max_ticks=200))
+
+    _, want = run(None, Checkpointer(str(tmp_path / "a")))
+    inj = FaultInjector([FaultEvent(tick=4, kind="nan_cache", slot=1)])
+    eng, got = run(inj, Checkpointer(str(tmp_path / "b")))
+    assert got == want
+    assert eng.n_restores >= 1 and eng.n_nan_events >= 1
+    assert eng._decode._cache_size() == 1
+
+
+# --- graceful drain ---------------------------------------------------------
+
+def test_preemption_drains_without_new_admissions():
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, max_batch=1, clock=FakeClock())
+    first = Request(rid=0, prompt=_prompt(0), max_new_tokens=6)
+    starved = Request(rid=1, prompt=_prompt(10), max_new_tokens=6)
+    eng.submit(first)
+    eng.submit(starved)
+    eng.step()                       # rid 0 admitted
+    h = PreemptionHandler()
+    h._handler(15, None)             # SIGTERM flag, no real signal
+    done = eng.run(preemption=h)
+    assert first.status == "done"
+    assert starved.status == "queued" and len(eng.queue) == 1
+    assert {r.rid for r in done} == {0}
+    # a draining engine also refuses new work explicitly
+    assert not eng.submit(Request(rid=2, prompt=_prompt(20)))
+
+
+def test_preemption_snapshot_handoff_is_bit_identical(tmp_path):
+    """Preempt mid-stream with a checkpointer: the engine snapshots and
+    exits; a successor restores and finishes EXACTLY the uninterrupted
+    run's tokens — in-flight slot and still-queued request included."""
+    T, cfg, params = _small_model()
+
+    def fresh(ck):
+        return Engine(params, cfg, max_batch=1, max_len=64,
+                      clock=FakeClock(), checkpointer=ck)
+
+    ref = Engine(params, cfg, max_batch=1, max_len=64,
+                 clock=FakeClock())
+    for lo, rid in ((0, 0), (10, 1)):
+        ref.submit(Request(rid=rid, prompt=_prompt(lo),
+                           max_new_tokens=6))
+    want = _tokens(ref.run())
+
+    ck = Checkpointer(str(tmp_path / "snap"))
+    eng = fresh(ck)
+    for lo, rid in ((0, 0), (10, 1)):
+        eng.submit(Request(rid=rid, prompt=_prompt(lo),
+                           max_new_tokens=6))
+    for _ in range(3):
+        eng.step()
+    h = PreemptionHandler()
+    h._handler(15, None)
+    eng.run(preemption=h)
+    assert eng.n_snapshots == 1
+    assert any(r is not None for r in eng.slots), \
+        "preemption should have left work in flight"
+
+    eng2 = fresh(ck)
+    eng2.restore_snapshot()
+    assert _tokens(eng2.run()) == want
+
+
+# --- power-gated admission + brownout ---------------------------------------
+
+def test_power_gate_cheaper_configs_buy_concurrency():
+    """The brownout lever itself: under a pJ/tick admission cap, the
+    exact pool fits 2 slots but the max-saving pool fits all 4."""
+    T, cfg, params = _small_model()
+    probe = Engine(params, cfg)
+    exact_tok = (probe._energy_pj_mean(probe.approx_cfg)
+                 * probe.macs_per_token)
+    cap = 2.5 * exact_tok
+
+    def active_after_admit(approx_cfg):
+        eng = Engine(params, cfg, max_batch=4, approx_cfg=approx_cfg,
+                     power_cap_pj_per_tick=cap, clock=FakeClock())
+        for i in range(4):
+            eng.submit(Request(rid=i, prompt=_prompt(i)))
+        eng.step()
+        return sum(s is not None for s in eng.slots)
+
+    assert active_after_admit(0) == 2
+    assert active_after_admit(31) == 4    # 4 × 0.556 ≈ 2.23 < 2.5
+
+
+def test_brownout_escalates_and_recovers_with_hysteresis():
+    T, cfg, params = _small_model()
+    bo = BrownoutController(ladder=(0, 31), high_watermark=0.5,
+                            low_watermark=0.25, hold_ticks=2)
+    eng = Engine(params, cfg, max_batch=1, queue_capacity=4,
+                 brownout=bo, clock=FakeClock())
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=_prompt(i), max_new_tokens=4))
+    eng.run(max_ticks=200)
+    assert bo.n_escalations >= 1, "queue pressure must escalate"
+    assert bo.n_recoveries == bo.n_escalations, \
+        "a drained queue must recover every level"
+    assert bo.level == 0
+    assert np.all(eng.approx_cfg == 0), "base config restored exactly"
+    assert any(level > 0 for level, _, _ in bo.history)
+
+
+def test_brownout_composes_with_scheduler_via_budget_scale():
+    """With a scheduler attached the brownout must NOT write configs —
+    it scales the scheduler's budget and the next retune re-plans."""
+    T, cfg, params = _small_model()
+    exact_pj = float(
+        Engine(params, cfg).macs_per_token
+        * Engine(params, cfg)._energy_pj_mean(np.zeros(2, np.int32)))
+    sched = PowerBudgetScheduler(exact_pj, probe_every=10**9,
+                                 retune_every=2)
+    bo = BrownoutController(ladder=(0, 31), high_watermark=0.5,
+                            low_watermark=0.25, hold_ticks=2)
+    eng = Engine(params, cfg, max_batch=1, queue_capacity=4,
+                 scheduler=sched, brownout=bo, clock=FakeClock())
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=_prompt(i), max_new_tokens=4))
+    eng.run(max_ticks=300)
+    scales = [h for h in bo.history]
+    assert bo.n_escalations >= 1
+    # while browned out the scheduler's effective budget tightened
+    assert any(s < 1.0
+               for s in [1.0 - MAC_SAVING_FRAC[31]] if scales)
+    assert sched.budget_scale == 1.0, "recovery must restore the scale"
+    assert eng._decode._cache_size() == 1
+
+
+# --- probe feedback chaos ---------------------------------------------------
+
+def test_drop_and_dup_probe_change_feedback_multiplicity():
+    T, cfg, params = _small_model()
+    sched = PowerBudgetScheduler(10.0, probe_every=1,
+                                 retune_every=10**9)
+    inj = FaultInjector([FaultEvent(tick=2, kind="dup_probe"),
+                         FaultEvent(tick=3, kind="drop_probe")])
+    eng = Engine(params, cfg, max_batch=1, approx_cfg=1,
+                 scheduler=sched, clock=FakeClock(), fault_injector=inj)
+    eng.submit(Request(rid=0, prompt=_prompt(0), max_new_tokens=8))
+    counts = []
+    while any(s is not None for s in eng.slots) or eng.queue:
+        before = sched.n_probes
+        eng.step()
+        counts.append(sched.n_probes - before)
+    assert counts[2] == 2, "dup_probe delivers feedback twice"
+    assert counts[3] == 0, "drop_probe suppresses feedback"
+    assert all(c == 1 for i, c in enumerate(counts) if i not in (2, 3))
+
+
+# --- traffic harness --------------------------------------------------------
+
+def test_traffic_is_replayable_per_tick():
+    classes = (TrafficClass("chat", ttft_slo_s=0.1, e2e_slo_s=1.0),
+               TrafficClass("batch", weight=0.5, prompt_len=12))
+    g1 = TrafficGenerator(classes, rate_per_tick=2.0, seed=42)
+    g2 = TrafficGenerator(classes, rate_per_tick=2.0, seed=42)
+    for tick in (0, 7, 3, 7):     # any access order, same answers
+        a, b = g1.arrivals(tick), g2.arrivals(tick)
+        assert [(r.rid, r.cls, r.prompt.tolist()) for r in a] \
+            == [(r.rid, r.cls, r.prompt.tolist()) for r in b]
+    assert any(g1.arrivals(t) for t in range(8))
+    g3 = TrafficGenerator(classes, rate_per_tick=2.0, seed=43)
+    assert any([(r.rid, r.prompt.tolist()) for r in g1.arrivals(t)]
+               != [(r.rid, r.prompt.tolist()) for r in g3.arrivals(t)]
+               for t in range(8)), "different seed, different trace"
+
+
+def test_traffic_spike_multiplies_rate_and_slo_report_scores():
+    classes = (TrafficClass("chat", ttft_slo_s=0.1, e2e_slo_s=1.0),)
+    g = TrafficGenerator(classes, rate_per_tick=1.0, seed=0,
+                         spikes=((10, 20, 4.0),))
+    assert g.rate_at(5) == 1.0 and g.rate_at(10) == 4.0
+    assert g.rate_at(19) == 4.0 and g.rate_at(20) == 1.0
+    spike = sum(len(g.arrivals(t)) for t in range(10, 20))
+    base = sum(len(g.arrivals(t)) for t in range(0, 10))
+    assert spike > base
+
+    met = Request(rid=0, prompt=_prompt(0), cls="chat", status="done",
+                  submitted_at=0.0, first_token_at=0.05,
+                  finished_at=0.5, ttft_slo_s=0.1, e2e_slo_s=1.0)
+    missed = Request(rid=1, prompt=_prompt(0), cls="chat", status="done",
+                     submitted_at=0.0, first_token_at=0.2,
+                     finished_at=0.5, ttft_slo_s=0.1, e2e_slo_s=1.0)
+    lost = Request(rid=2, prompt=_prompt(0), cls="chat",
+                   status="rejected", submitted_at=0.0)
+    rep = slo_report([met, missed, lost])
+    chat = rep["classes"]["chat"]
+    assert chat["offered"] == 3 and chat["served"] == 2
+    assert chat["availability"] == pytest.approx(2 / 3)
+    assert chat["slo_attainment"] == pytest.approx(1 / 2)
+    assert rep["total"]["rejected"] == 1

@@ -397,7 +397,7 @@ def single_rounding(ctx: FileContext):
 # ---------------------------------------------------------------------------
 
 TICK_METHODS = {"step", "_step", "tick", "on_tick", "on_step", "record",
-                "record_probe", "observe"}
+                "record_probe", "observe", "begin_tick", "arrivals"}
 
 
 @rule("bounded-state")
