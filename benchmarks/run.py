@@ -573,6 +573,28 @@ def bench_runtime_config_switch():
           f"executables=1_vs_32")
 
 
+def bench_paged_serving():
+    """The PR-8 tentpole quantified: paged KV serving.
+
+    Dense-vs-paged bit-identity at equal occupancy, a 4->256 concurrent
+    stream sweep through ONE decode executable (live error-config
+    retune mid-sweep, zero retraces), >= 3x concurrent streams on a
+    pool byte-equal to the dense cache, chunked prefill's P99 tick-
+    stall improvement under a long-prompt trace, and prefix-reuse
+    prefill-token savings with identical outputs.  The bars are
+    ENFORCED in ``benchmarks/paged_serving.py``: a violation raises and
+    becomes the ERROR row CI greps for.  Emits BENCH_paged_serving.json
+    (CI artifact).
+    """
+    import json
+
+    from benchmarks.paged_serving import run_paged_serving
+
+    out = run_paged_serving()
+    with open("BENCH_paged_serving.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+
+
 BENCHES = {
     "table1": bench_table1_multiplier_metrics,
     "fig5": bench_fig5_power_improvement,
@@ -586,14 +608,22 @@ BENCHES = {
     "scheduler": bench_scheduler,
     "resilience": bench_resilience,
     "sharded_decode": bench_sharded_decode,
+    "paged_serving": bench_paged_serving,
     "lm_energy": bench_lm_energy_model,
     "roofline": bench_roofline_table,
     "runtime_config": bench_runtime_config_switch,
 }
 
+# every bench that writes a BENCH_*.json artifact — `run.py all`
+# regenerates the full artifact set in one command
+JSON_BENCHES = ["pallas_path", "moe_path", "scheduler", "resilience",
+                "sharded_decode", "paged_serving"]
+
 
 def main() -> None:
     which = sys.argv[1:] or list(BENCHES)
+    if which == ["all"]:
+        which = JSON_BENCHES
     print("name,us_per_call,derived")
     for name in which:
         try:

@@ -32,6 +32,16 @@ ladder under pressure, and --chaos SEED replays a seeded fault plan:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --traffic 0.5 --spike 10:40:4.0 --ticks 80 --queue-capacity 8 \
       --power-cap-frac 0.6 --brownout 0,16,31 --chaos 7
+
+Paged serving (DESIGN.md §11): --paged swaps the dense (max_batch,
+max_len) KV pool for a block pool with per-request block tables,
+chunked prefill, prefix sharing, and preempt-by-recompute — the
+concurrency scaler; geometry via --num-blocks/--block-size/
+--prefill-chunk (single-host only):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --paged --max-batch 64 --num-blocks 258 --block-size 16 \
+      --prefill-chunk 32 --requests 64
 """
 from __future__ import annotations
 
@@ -92,6 +102,18 @@ def main():
                     help="traffic burst window (ticks), e.g. 10:40:4.0")
     ap.add_argument("--ticks", type=int, default=60,
                     help="engine ticks to drive under --traffic")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: block pool + per-request "
+                         "block tables, chunked prefill, prefix "
+                         "sharing, preempt-by-recompute (DESIGN.md §11)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="paged pool size incl. the 2 reserved blocks "
+                         "(default: the dense pool's block count)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens advanced per engine tick "
+                         "(multiple of --block-size)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -137,11 +159,26 @@ def main():
                         stall_s=0.05)], seed=args.chaos)
         print(f"chaos plan (seed {args.chaos}): "
               f"{[(e.tick, e.kind) for e in injector.plan]}")
+    paged = None
+    if args.paged:
+        from repro.serve.paged_cache import N_RESERVED, PagedCacheConfig
+        assert mapping is None, "--paged is single-host (DESIGN.md §11)"
+        num_blocks = args.num_blocks
+        if num_blocks is None:
+            # default: the same token capacity the dense pool would hold
+            num_blocks = (args.max_batch * args.max_len
+                          // args.block_size + N_RESERVED)
+        paged = PagedCacheConfig(num_blocks=num_blocks,
+                                 block_size=args.block_size,
+                                 prefill_chunk=args.prefill_chunk)
+        print(f"paged KV: {num_blocks} blocks x {args.block_size} tokens "
+              f"({paged.usable_blocks * args.block_size} usable), "
+              f"prefill chunk {args.prefill_chunk}")
     eng = Engine(params, cfg, max_batch=args.max_batch,
                  max_len=args.max_len, approx_cfg=args.approx_cfg,
                  scheduler=sched, mapping=mapping, param_specs=specs,
                  queue_capacity=args.queue_capacity, brownout=brownout,
-                 fault_injector=injector)
+                 fault_injector=injector, paged=paged)
     from repro.core.power_model import energy_per_token_pj
     exact_pj = energy_per_token_pj(
         np.zeros_like(eng.approx_cfg), eng.macs_per_token,
@@ -214,6 +251,11 @@ def main():
               f"{rr['expired']}, failed {rr['failed']}, retries "
               f"{rr['retries']}, nan events {rr['nan_events']}, "
               f"quarantined {rr['quarantined']}")
+    if args.paged:
+        bp = eng.backpressure
+        print(f"paged: {eng.n_preempted} preemptions, "
+              f"{eng.n_shared_blocks} shared prefix blocks, "
+              f"{bp['kv_free_blocks']}/{paged.usable_blocks} blocks free")
     if brownout is not None:
         b = brownout.report()
         print(f"brownout: {b['escalations']} escalations, "

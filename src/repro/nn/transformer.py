@@ -1141,12 +1141,28 @@ def decode_step(params, cfg: ModelConfig, cache, token, *,
 
 def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
             enc_embeds=None, max_len: int | None = None,
-            approx_cfg=0):
+            approx_cfg=0, true_len=None):
     """Sequence prefill: returns (last-token logits, populated cache).
 
     Implementation: full forward for activations; K/V recomputed per
     layer into the cache via a per-layer pass (keeps code simple and
-    XLA CSEs the shared projections)."""
+    XLA CSEs the shared projections).
+
+    ``true_len`` (traced int32 scalar) marks the real prompt length
+    inside right-padded ``tokens`` so ONE compiled executable serves
+    every prompt length up to the pad boundary (the engine pads to
+    ``prefill_pad``): K/V writes beyond ``true_len`` are zeroed and the
+    returned logits come from position ``true_len - 1``.  Causality
+    makes every position < true_len blind to the pad tokens, so the
+    result is bit-identical to an unpadded prefill of length true_len.
+    Attention-only patterns (recurrent states would scan the pads) and
+    float KV caches only (int8 would stamp nonzero scales on pads)."""
+    if true_len is not None:
+        if not all(k in ("global", "local") for k in cfg.layer_kinds()):
+            raise ValueError("true_len= needs an attention-only pattern")
+        if cfg.kv_quant or cfg.vision_prefix_len or cfg.encoder_decoder:
+            raise ValueError("true_len= is incompatible with kv_quant / "
+                             "vision prefixes / encoder-decoder")
     b, s = tokens.shape[0], tokens.shape[1]
     if cfg.vision_prefix_len and vision_embeds is not None:
         s = s + cfg.vision_prefix_len
@@ -1185,6 +1201,13 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
             s_buf = cl["k"].shape[1]
             k_w = k[:, -s_buf:]
             v_w = v[:, -s_buf:]
+            if true_len is not None:
+                # zero the pad positions so the cache matches what an
+                # unpadded prefill of length true_len would hold
+                pad_mask = (jnp.arange(k_w.shape[1])[None]
+                            < jnp.reshape(true_len, (1, 1)))
+                k_w = k_w * pad_mask[:, :, None, None].astype(k_w.dtype)
+                v_w = v_w * pad_mask[:, :, None, None].astype(v_w.dtype)
             cl = _kv_write(cl, kind, k_w, v_w, jnp.zeros((), jnp.int32), cfg,
                            cfg.window)
             if kind == "local" and x.shape[1] > s_buf:
@@ -1238,7 +1261,8 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
             return res + y, state
         raise ValueError(kind)
 
-    new_cache: Params = {"pos": jnp.asarray(s, jnp.int32)}
+    new_cache: Params = {"pos": (jnp.asarray(s, jnp.int32) if true_len is None
+                                 else jnp.asarray(true_len, jnp.int32))}
     if "scan" in params["blocks"]:
         def scan_fn(x, gp_cl_ac):
             gp, cl, ac = gp_cl_ac
@@ -1274,5 +1298,305 @@ def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
         new_cache[f"rest{r}"] = c
         r += 1
     x = _apply_norm(params["final_norm"], x, cfg)
-    logits = logits_for(params, cfg, x[:, -1])
+    last = (x[:, -1] if true_len is None
+            else jnp.take(x, jnp.asarray(true_len, jnp.int32) - 1, axis=1))
+    logits = logits_for(params, cfg, last)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# serving: paged KV cache (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# The paged entry points replace the dense (B, S, KV, hd) cache rows with
+# one (num_blocks, block_size, KV, hd) pool per layer plus per-request
+# block tables.  Tables, sequence lengths and the active mask are int32
+# DATA operands — never shapes — so one compiled executable serves any
+# mix of stream counts and prompt lengths (the zero-retrace invariant).
+# Block ids 0/1 are reserved (see serve/paged_cache.py): 0 is all-zero
+# and backs unallocated table entries, 1 absorbs masked-off writes.
+
+def _paged_gate(cfg: ModelConfig):
+    if any(k != "global" for k in cfg.layer_kinds()):
+        raise ValueError("paged cache needs an all-'global' pattern")
+    if cfg.kv_quant or cfg.kv_onehot_write:
+        raise ValueError("paged cache is float-KV only (no kv_quant / "
+                         "kv_onehot_write)")
+    if cfg.encoder_decoder or cfg.vision_prefix_len:
+        raise ValueError("paged cache does not cover encoder-decoder or "
+                         "vision-prefix models")
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Block-pool cache pytree (+ logical specs) for paged decode.
+
+    Per attention layer: K/V pools of shape (num_blocks, block_size,
+    KV, hd) — no batch axis; requests own pool blocks through their
+    block tables.  Block 0 (ZERO_BLOCK) is all-zero and must never be
+    written so unowned table entries gather zeros, matching what the
+    dense cache holds past ``pos``."""
+    _paged_gate(cfg)
+    npat = len(cfg.pattern)
+    n_groups, rem = cfg.n_layers // npat, cfg.n_layers % npat
+
+    def layer_cache():
+        z = jnp.zeros((num_blocks, block_size, cfg.n_kv_heads,
+                       cfg.head_dim), cfg.compute_dtype)
+        return ({"k": z, "v": z},
+                {"k": (None, None, "tp?", "kv_hd"),
+                 "v": (None, None, "tp?", "kv_hd")})
+
+    cache: Params = {}
+    cspec: Params = {}
+    if n_groups:
+        gc, gs = {}, {}
+        for j in range(npat):
+            c, sp = layer_cache()
+            gc[f"b{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape).copy(), c)
+            gs[f"b{j}"] = jax.tree.map(
+                lambda t: (None,) + tuple(t), sp,
+                is_leaf=lambda t: isinstance(t, tuple))
+        cache["scan"], cspec["scan"] = gc, gs
+    for r in range(rem):
+        c, sp = layer_cache()
+        cache[f"rest{r}"], cspec[f"rest{r}"] = c, sp
+    return cache, cspec
+
+
+def _paged_attn_block(p, x_t, cl, cfg, tables, seq_lens, active, *,
+                      approx_cfg=0, backend="xla"):
+    """One paged layer, one token per row.  x_t: (B,1,d); cl holds the
+    layer's (NB, bs, KV, hd) K/V pools; tables: (B,P) int32; seq_lens:
+    (B,) int32 tokens already cached per row; active: (B,) bool."""
+    from repro.serve.paged_cache import TRASH_BLOCK
+
+    from .layers import apply_rope
+    res = x_t
+    h = _apply_norm(p["norm1"], x_t, cfg)
+    q = _proj(h, p["attn"]["wq"], approx_cfg, p["attn"].get("bq"), cfg,
+              cfg.n_heads)
+    k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"), cfg,
+              cfg.n_kv_heads)
+    v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"), cfg,
+              cfg.n_kv_heads)
+    if cfg.norm == "rms":
+        posv = seq_lens[:, None]
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+    bs = cl["k"].shape[1]
+    b_idx = jnp.arange(x_t.shape[0])
+    # the current token's K/V lands in the row's tail block; inactive
+    # rows scatter into the trash block (contents never read)
+    write_block = jnp.where(active, tables[b_idx, seq_lens // bs],
+                            TRASH_BLOCK)
+    write_off = seq_lens % bs
+    cl = dict(cl)
+    cl["k"] = cl["k"].at[write_block, write_off].set(
+        k[:, 0].astype(cl["k"].dtype))
+    cl["v"] = cl["v"].at[write_block, write_off].set(
+        v[:, 0].astype(cl["v"].dtype))
+    cache_len = seq_lens + 1
+    if backend == "pallas":
+        from repro.kernels.flash_attention.paged_attention import \
+            paged_decode_attention
+        attn = paged_decode_attention(
+            q, cl["k"], cl["v"], tables, cache_len,
+            logit_cap=cfg.attn_softcap, scale=cfg.query_scale,
+            interpret=cfg.mac_interpret)
+    else:
+        # gather-view decode: (B, P*bs, KV, hd) through the table, then
+        # the stock masked decode attention (bit-identical to the dense
+        # pool when P*bs matches its max_len — same shapes, same values:
+        # positions >= cache_len are masked to NEG_INF either way)
+        kc = jnp.reshape(cl["k"][tables],
+                         (x_t.shape[0], -1, cfg.n_kv_heads, cfg.head_dim))
+        vc = jnp.reshape(cl["v"][tables],
+                         (x_t.shape[0], -1, cfg.n_kv_heads, cfg.head_dim))
+        attn = decode_attention(q, kc, vc, cache_len, window=0,
+                                logit_cap=cfg.attn_softcap,
+                                scale=cfg.query_scale)
+    y = _attn_out(attn, p["attn"]["wo"], approx_cfg, cfg)
+    if cfg.post_norm:
+        y = _apply_norm(p["post1"], y, cfg)
+    x_t = res + y
+    res = x_t
+    h = _apply_norm(p["norm2"], x_t, cfg)
+    y = _mlp_apply(p["mlp"], h, cfg, approx_cfg)
+    if cfg.post_norm:
+        y = _apply_norm(p["post2"], y, cfg)
+    return res + y, cl
+
+
+def paged_decode_step(params, cfg: ModelConfig, cache, token, *,
+                      approx_cfg=0, backend="xla"):
+    """One token for every row against the block pool.
+
+    ``cache`` carries the pool leaves ("scan"/"rest{r}") plus three data
+    operands: "tables" (B,P) int32 block tables, "seq_lens" (B,) int32,
+    "active" (B,) bool.  Returns (logits (B,V), new pool leaves) — table
+    bookkeeping stays on the host (serve/paged_cache.py)."""
+    tables = cache["tables"]
+    seq_lens = cache["seq_lens"]
+    active = cache["active"]
+    x = embed_tokens(params, cfg, token)
+    if cfg.norm == "ln":
+        x = x + jnp.take(params["dec_pos"], seq_lens, axis=0
+                         )[:, None].astype(x.dtype)
+    new_cache: Params = {}
+    npat = len(cfg.pattern)
+    n_groups, acfg_scan, acfg_rest = _layer_cfg_plan(params["blocks"],
+                                                     approx_cfg, npat)
+
+    if "scan" in params["blocks"]:
+        def scan_fn(x, gp_cl_ac):
+            gp, cl, ac = gp_cl_ac
+            ncl = {}
+            for j in range(npat):
+                x, c = _paged_attn_block(
+                    gp[f"b{j}"], x, cl[f"b{j}"], cfg, tables, seq_lens,
+                    active,
+                    approx_cfg=approx_cfg if ac is None else ac[j],
+                    backend=backend)
+                ncl[f"b{j}"] = c
+            return x, ncl
+        if cfg.scan_layers:
+            x, new_scan = jax.lax.scan(scan_fn, x, (params["blocks"]["scan"],
+                                                    cache["scan"],
+                                                    acfg_scan))
+        else:
+            outs = []
+            for g in range(n_groups):
+                gp_cl = jax.tree.map(lambda a: a[g],
+                                     (params["blocks"]["scan"],
+                                      cache["scan"]))
+                ac = acfg_scan[g] if acfg_scan is not None else None
+                x, ncl = scan_fn(x, gp_cl + (ac,))
+                outs.append(ncl)
+            new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache["scan"] = new_scan
+    r = 0
+    while f"rest{r}" in params["blocks"]:
+        x, c = _paged_attn_block(
+            params["blocks"][f"rest{r}"], x, cache[f"rest{r}"], cfg,
+            tables, seq_lens, active,
+            approx_cfg=approx_cfg if acfg_rest is None else acfg_rest[r],
+            backend=backend)
+        new_cache[f"rest{r}"] = c
+        r += 1
+    x = _apply_norm(params["final_norm"], x, cfg)
+    logits = logits_for(params, cfg, x[:, 0])
+    return logits, new_cache
+
+
+def paged_prefill_chunk(params, cfg: ModelConfig, cache, tokens, *,
+                        slot, start, count, approx_cfg=0):
+    """Advance one request's prefill by one chunk of its prompt.
+
+    tokens: (1, C) right-padded chunk; slot/start/count are traced int32
+    scalars — the request's row, the absolute position of tokens[0], and
+    the number of valid tokens in the chunk.  K/V for the valid tokens
+    scatter into the slot's blocks (pads go to the trash block); each
+    chunk position attends to every cached key at absolute position
+    <= its own, so chaining chunks reproduces full-prompt prefill.
+    Returns (logits (1,V) at the last valid position, new pool leaves).
+    """
+    from repro.serve.paged_cache import TRASH_BLOCK
+
+    from .attention import NEG_INF, _repeat_kv
+    from .layers import apply_rope
+    tables = cache["tables"]
+    c_len = tokens.shape[1]
+    tok_pos = start + jnp.arange(c_len)            # (C,) absolute
+    positions = tok_pos[None]
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.norm == "ln":
+        x = x + jnp.take(params["dec_pos"], tok_pos, axis=0
+                         )[None].astype(x.dtype)
+    row = tables[slot]                             # (P,)
+    scale = (cfg.query_scale if cfg.query_scale is not None
+             else cfg.head_dim ** -0.5)
+
+    def fill_chunk(p, x, cl, ac):
+        h = _apply_norm(p["norm1"], x, cfg)
+        q = _proj(h, p["attn"]["wq"], ac, p["attn"].get("bq"), cfg,
+                  cfg.n_heads)
+        k = _proj(h, p["attn"]["wk"], ac, p["attn"].get("bk"), cfg,
+                  cfg.n_kv_heads)
+        v = _proj(h, p["attn"]["wv"], ac, p["attn"].get("bv"), cfg,
+                  cfg.n_kv_heads)
+        if cfg.norm == "rms":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        bs = cl["k"].shape[1]
+        blocks = jnp.where(jnp.arange(c_len) < count,
+                           row[tok_pos // bs], TRASH_BLOCK)
+        offs = tok_pos % bs
+        cl = dict(cl)
+        cl["k"] = cl["k"].at[blocks, offs].set(k[0].astype(cl["k"].dtype))
+        cl["v"] = cl["v"].at[blocks, offs].set(v[0].astype(cl["v"].dtype))
+        kc = jnp.reshape(cl["k"][row],
+                         (1, -1, cfg.n_kv_heads, cfg.head_dim))
+        vc = jnp.reshape(cl["v"][row],
+                         (1, -1, cfg.n_kv_heads, cfg.head_dim))
+        k_r = _repeat_kv(kc, cfg.n_heads // cfg.n_kv_heads)
+        v_r = _repeat_kv(vc, cfg.n_heads // cfg.n_kv_heads)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                            k_r.astype(jnp.float32)) * scale
+        if cfg.attn_softcap > 0:
+            scores = softcap(scores, cfg.attn_softcap)
+        key_pos = jnp.arange(kc.shape[1])
+        valid = key_pos[None, :] <= tok_pos[:, None]       # (C, L)
+        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", w,
+                          v_r.astype(jnp.float32)).astype(q.dtype)
+        y = _attn_out(attn, p["attn"]["wo"], ac, cfg)
+        if cfg.post_norm:
+            y = _apply_norm(p["post1"], y, cfg)
+        x = x + y
+        res = x
+        h = _apply_norm(p["norm2"], x, cfg)
+        y = _mlp_apply(p["mlp"], h, cfg, ac)
+        if cfg.post_norm:
+            y = _apply_norm(p["post2"], y, cfg)
+        return res + y, cl
+
+    new_cache: Params = {}
+    npat = len(cfg.pattern)
+    n_groups, acfg_scan, acfg_rest = _layer_cfg_plan(params["blocks"],
+                                                     approx_cfg, npat)
+    if "scan" in params["blocks"]:
+        def scan_fn(x, gp_cl_ac):
+            gp, cl, ac = gp_cl_ac
+            ncl = {}
+            for j in range(npat):
+                x, c = fill_chunk(gp[f"b{j}"], x, cl[f"b{j}"],
+                                  approx_cfg if ac is None else ac[j])
+                ncl[f"b{j}"] = c
+            return x, ncl
+        if cfg.scan_layers:
+            x, new_scan = jax.lax.scan(scan_fn, x, (params["blocks"]["scan"],
+                                                    cache["scan"],
+                                                    acfg_scan))
+        else:
+            outs = []
+            for g in range(n_groups):
+                gp_cl = jax.tree.map(lambda a: a[g],
+                                     (params["blocks"]["scan"],
+                                      cache["scan"]))
+                ac = acfg_scan[g] if acfg_scan is not None else None
+                x, ncl = scan_fn(x, gp_cl + (ac,))
+                outs.append(ncl)
+            new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache["scan"] = new_scan
+    r = 0
+    while f"rest{r}" in params["blocks"]:
+        x, c = fill_chunk(params["blocks"][f"rest{r}"], x,
+                          cache[f"rest{r}"],
+                          approx_cfg if acfg_rest is None else acfg_rest[r])
+        new_cache[f"rest{r}"] = c
+        r += 1
+    x = _apply_norm(params["final_norm"], x, cfg)
+    last = jnp.take(x, count - 1, axis=1)
+    logits = logits_for(params, cfg, last)
     return logits, new_cache

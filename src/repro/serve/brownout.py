@@ -99,7 +99,11 @@ class BrownoutController:
     # -- engine hook -----------------------------------------------------
     def on_tick(self, engine) -> None:
         bp = engine.backpressure
-        util = float(bp["utilization"])
+        # paged serving (PR 8): the free-block watermark is a second
+        # pressure axis — a nearly-exhausted pool preempts streams, so
+        # brownout treats it exactly like a deep queue
+        util = max(float(bp["utilization"]),
+                   float(bp.get("kv_utilization", 0.0)))
         fault_delta = self._fault_pressure(engine)
         pressure = (util >= self.high_watermark
                     or fault_delta >= self.fault_threshold)

@@ -91,6 +91,25 @@ Chaos itself is injected via ``Engine(fault_injector=...)``
 (serve/brownout.py) — both pure python around the SAME two compiled
 executables: zero retraces under chaos.
 
+PR 8 scales concurrency past the dense pool: ``Engine(paged=
+PagedCacheConfig(...))`` swaps the (max_batch, max_len) cache rows for
+a PAGED pool (DESIGN.md §11) — fixed-size blocks owned per request
+through block tables, a host-side refcounting allocator
+(serve/paged_cache.py), chunked prefill interleaved with decode ticks
+(prompts advance ``prefill_chunk`` tokens per tick instead of
+monopolizing one), prefix block sharing across requests with a common
+prompt (copy-on-write), and preempt-by-recompute when the pool runs
+dry (victim blocks are freed, the request re-queues at the FRONT and
+re-prefills prompt+generated on re-admission — token stream
+unchanged).  Block tables and sequence lengths are traced int32 DATA
+operands of the decode executable, never shapes, so the zero-retrace
+invariant extends to any stream count / prompt-length mix; at equal
+occupancy the gathered paged view is bit-identical to the dense rows
+(tests/test_paged_serving.py).  ``prefill_pad`` (independent of
+paging) pads prompts to a boundary and passes the true length as a
+traced scalar, collapsing the per-prompt-length prefill retrace to ONE
+executable.
+
 CONFIG-KEY CONVENTION (used by ``apply_allocation``, the scheduler,
 and the controller alike): a config-tensor cell is addressed by
 ``layer`` (int index into the depth axis), then — only when the engine
@@ -115,6 +134,7 @@ from repro.core.power_model import (ENERGY_PER_MAC_PJ, MAC_SAVING_FRAC,
                                     energy_per_token_pj, error_rank)
 from repro.dist.sharding import activate as _activate, lsc_tree
 from repro.nn import transformer as T
+from .paged_cache import ZERO_BLOCK, PagedCacheConfig, PageAllocator
 from .sampling import sample
 
 _ENERGY_PJ = ENERGY_PER_MAC_PJ
@@ -216,7 +236,9 @@ class Engine:
                  retry_cap_s: float = 2.0, nan_max_strikes: int = 2,
                  power_cap_pj_per_tick: float | None = None,
                  fault_injector=None, brownout=None,
-                 checkpointer=None, snapshot_every: int = 0):
+                 checkpointer=None, snapshot_every: int = 0,
+                 paged: PagedCacheConfig | None = None,
+                 prefill_pad: int = 0):
         """Continuous-batching engine over one compiled prefill + one
         compiled decode executable.
 
@@ -287,6 +309,20 @@ class Engine:
             drain's snapshot-and-exit path).
         snapshot_every (default 0 = off): auto-snapshot cadence in
             decode steps.
+
+        Paged serving knobs (PR 8, DESIGN.md §11):
+
+        paged (default None = dense pool): a ``serve.paged_cache
+            .PagedCacheConfig`` — the KV cache becomes a block pool
+            with per-request block tables, chunked prefill, prefix
+            sharing, and preempt-by-recompute.  Single-host only (v1);
+            requires an all-'global', float-KV model and
+            ``max_len % block_size == 0``.
+        prefill_pad (default 0 = off): pad prompts up to a multiple of
+            this many tokens and pass the true length as a TRACED
+            scalar, so all prompt lengths share ONE compiled prefill
+            executable (paged mode implies the chunk boundary).
+            Attention-only patterns, float KV.
         """
         # quantize every dense GEMM weight ONCE at engine init and carry
         # QTensors through the jitted step functions — no decode step
@@ -366,7 +402,42 @@ class Engine:
         # it; unpinned slots follow the engine config live, so
         # set_approx_cfg retunes in-flight generation at the next tick
         self.slot_pinned = np.zeros(max_batch, dtype=bool)
-        self.cache, self.cache_spec = T.init_cache(cfg, max_batch, max_len)
+        # -- paged KV cache (PR 8, DESIGN.md §11) ---------------------
+        self.paged = paged
+        self.prefill_pad = int(prefill_pad)
+        if paged is not None:
+            assert mapping is None, \
+                "paged serving is single-host in v1 (DESIGN.md §11)"
+            assert max_len % paged.block_size == 0, (max_len,
+                                                     paged.block_size)
+            # paged prefill always runs chunked, which needs the padded
+            # one-executable prefill path
+            self.prefill_pad = paged.prefill_chunk
+            self.allocator = PageAllocator(paged)
+            self.pages_per_slot = max_len // paged.block_size
+            self.block_tables = np.full((max_batch, self.pages_per_slot),
+                                        ZERO_BLOCK, dtype=np.int32)
+            self.seq_lens = np.zeros(max_batch, dtype=np.int32)
+            # authoritative per-slot owned-block lists, in table order
+            # (block_tables is the derived device operand)
+            self._slot_blocks: list[list[int]] = [[] for _ in
+                                                  range(max_batch)]
+            # slot -> {"tokens": np.ndarray, "next": int}: requests mid
+            # chunked-prefill (excluded from the decode batch)
+            self._prefill_progress: dict[int, dict] = {}
+            self.n_preempted = 0
+            self.n_shared_blocks = 0
+            self.cache, self.cache_spec = T.init_paged_cache(
+                cfg, paged.num_blocks, paged.block_size)
+        else:
+            self.cache, self.cache_spec = T.init_cache(cfg, max_batch,
+                                                       max_len)
+        if self.prefill_pad > 0 and paged is None:
+            # satellite gate: padded prefill masks K/V by true_len,
+            # which needs an attention-only float-KV model
+            assert all(k in ("global", "local")
+                       for k in cfg.layer_kinds()) and not cfg.kv_quant, \
+                "prefill_pad needs an attention-only float-KV model"
         if mapping is not None:
             # canonical cache placement: kv_seq/kv_hd shard per the
             # mapping, batch over the data axis when divisible.  Kept
@@ -426,18 +497,53 @@ class Engine:
         # one they constrain the cache in AND out to its canonical
         # sharding, so the decode-feeds-its-own-cache loop is a sharding
         # fixed point from the very first call (one executable, ever).
-        @jax.jit
-        def _decode(params, cache, token, acfg):
-            cache = lsc_tree(cache, cache_spec_)
-            logits, new_cache = T.decode_step(params, cfg_, cache, token,
-                                              approx_cfg=acfg)
-            return logits, lsc_tree(new_cache, cache_spec_)
+        if paged is not None:
+            backend_ = paged.attn_backend
 
-        self._decode = _decode
-        self._prefill = jax.jit(
-            lambda params, tokens, acfg: T.prefill(params, cfg_, tokens,
-                                                   max_len=max_len,
-                                                   approx_cfg=acfg))
+            @jax.jit
+            def _decode(params, cache, token, acfg):
+                return T.paged_decode_step(params, cfg_, cache, token,
+                                           approx_cfg=acfg,
+                                           backend=backend_)
+
+            self._decode = _decode
+            # two prefill executables, ever: the one-chunk fast path
+            # (stock T.prefill on a chunk-length buffer — bit-identical
+            # K/V to the dense engine's padded prefill; scattered into
+            # the pool on the host) and the mid-prompt chunk step
+            # (slot/start/count as traced scalars)
+            self._prefill = jax.jit(
+                lambda params, tokens, acfg, true_len: T.prefill(
+                    params, cfg_, tokens, max_len=paged.prefill_chunk,
+                    approx_cfg=acfg, true_len=true_len))
+            self._prefill_chunk = jax.jit(
+                lambda params, cache, tokens, slot, start, count, acfg:
+                T.paged_prefill_chunk(params, cfg_, cache, tokens,
+                                      slot=slot, start=start, count=count,
+                                      approx_cfg=acfg))
+        else:
+            @jax.jit
+            def _decode(params, cache, token, acfg):
+                cache = lsc_tree(cache, cache_spec_)
+                logits, new_cache = T.decode_step(params, cfg_, cache,
+                                                  token, approx_cfg=acfg)
+                return logits, lsc_tree(new_cache, cache_spec_)
+
+            self._decode = _decode
+            if self.prefill_pad > 0:
+                # ONE compiled prefill for every prompt length: tokens
+                # arrive padded to the boundary, the real length rides
+                # along as a traced scalar (satellite: kills the
+                # per-prompt-length retrace)
+                self._prefill = jax.jit(
+                    lambda params, tokens, acfg, true_len: T.prefill(
+                        params, cfg_, tokens, max_len=max_len,
+                        approx_cfg=acfg, true_len=true_len))
+            else:
+                self._prefill = jax.jit(
+                    lambda params, tokens, acfg: T.prefill(
+                        params, cfg_, tokens, max_len=max_len,
+                        approx_cfg=acfg))
 
         # online power-budget scheduler (serve/scheduler.py): hooks into
         # every tick AFTER the jitted functions exist — its shadow
@@ -577,12 +683,20 @@ class Engine:
         """Admission-pressure signal for callers and the brownout
         controller: queue depth/utilization, active slots, lifetime
         rejections, drain state."""
-        return {"queued": len(self.queue),
-                "capacity": self.queue_capacity,
-                "utilization": len(self.queue) / self.queue_capacity,
-                "active": sum(s is not None for s in self.slots),
-                "rejected": self.n_rejected,
-                "draining": self._draining}
+        bp = {"queued": len(self.queue),
+              "capacity": self.queue_capacity,
+              "utilization": len(self.queue) / self.queue_capacity,
+              "active": sum(s is not None for s in self.slots),
+              "rejected": self.n_rejected,
+              "draining": self._draining}
+        if self.paged is not None:
+            # free-block watermark: the paged-pool pressure signal the
+            # brownout controller folds into its utilization reading
+            free = self.allocator.free_blocks()
+            bp["kv_free_blocks"] = free
+            bp["kv_utilization"] = 1.0 - free / self.paged.usable_blocks
+            bp["preempted"] = self.n_preempted
+        return bp
 
     def drain(self) -> None:
         """Stop admitting (submit rejects, _admit idles); in-flight
@@ -601,6 +715,9 @@ class Engine:
         self.completed.append(req)
         self.slots[slot] = None
         self._nan_strikes[slot] = 0
+        if self.paged is not None:
+            self._release_slot(slot)
+            self.slot_pos[slot] = 0
         if status == "expired":
             self.n_expired += 1
         elif status == "failed":
@@ -714,20 +831,387 @@ class Engine:
                 req.status = "active"
                 self._nan_strikes[slot] = 0
                 self.slot_pinned[slot] = pinned
-                tokens = self._replicate(
-                    jnp.asarray(req.prompt, jnp.int32)[None, :])
-                logits, row_cache = self._prefill(self.params, tokens,
-                                                  self._replicate(req_cfg))
-                self.n_prefill_tokens += tokens.shape[1]
+                toks = np.asarray(req.prompt, np.int32).reshape(-1)
+                true_len = toks.shape[0]
+                if self.prefill_pad > 0:
+                    # pad to the boundary and pass the true length as a
+                    # TRACED scalar: every prompt length in a boundary
+                    # bucket shares ONE compiled prefill (satellite:
+                    # kills the per-prompt-length retrace)
+                    pad = (-true_len) % self.prefill_pad
+                    if pad:
+                        toks = np.concatenate(
+                            [toks, np.zeros(pad, np.int32)])
+                    assert toks.shape[0] <= self.max_len, (toks.shape,
+                                                           self.max_len)
+                    tokens = self._replicate(
+                        jnp.asarray(toks, jnp.int32)[None, :])
+                    logits, row_cache = self._prefill(
+                        self.params, tokens, self._replicate(req_cfg),
+                        jnp.asarray(true_len, jnp.int32))
+                else:
+                    tokens = self._replicate(
+                        jnp.asarray(toks, jnp.int32)[None, :])
+                    logits, row_cache = self._prefill(
+                        self.params, tokens, self._replicate(req_cfg))
+                self.n_prefill_tokens += true_len
+                # energy charges the EXECUTED width (padded)
                 self._count_energy(tokens.shape[1], req_cfg, "prefill")
                 self._splice_cache(slot, row_cache)
-                self.slot_pos[slot] = tokens.shape[1]
+                self.slot_pos[slot] = true_len
                 self.slot_cfg[slot] = req_cfg
                 self.rng, k = jax.random.split(self.rng)
                 first = sample(logits, k, temperature=req.temperature)
                 req.tokens.append(int(first[0]))
                 req.first_token_at = self.clock()
                 self.slots[slot] = req
+
+    # -- paged serving (PR 8, DESIGN.md §11) -----------------------------
+    def _release_slot(self, slot: int) -> None:
+        """Free a paged slot's blocks and reset its table row to the
+        zero block (gathers read zeros, like dense rows past pos)."""
+        self.allocator.release(self._slot_blocks[slot])
+        self._slot_blocks[slot] = []
+        self.block_tables[slot] = ZERO_BLOCK
+        self.seq_lens[slot] = 0
+        self._prefill_progress.pop(slot, None)
+
+    def _paged_operands(self, active_mask=None) -> dict:
+        """Pool leaves + the three int32/bool DATA operands the paged
+        executables read: block tables, sequence lengths, active mask.
+        Data, never shapes — the zero-retrace invariant."""
+        cache = dict(self.cache)
+        # .copy(): jnp.asarray of a host ndarray may be zero-copy on CPU,
+        # and the tick mutates block_tables/seq_lens in place after the
+        # dispatch — the operands must be immutable snapshots
+        cache["tables"] = self._replicate(
+            jnp.asarray(self.block_tables.copy(), jnp.int32))
+        cache["seq_lens"] = self._replicate(
+            jnp.asarray(self.seq_lens.copy(), jnp.int32))
+        if active_mask is None:
+            active_mask = np.zeros(self.max_batch, dtype=bool)
+        cache["active"] = self._replicate(jnp.asarray(active_mask))
+        return cache
+
+    def _copy_block(self, src: int, dst: int) -> None:
+        """Copy one block's K/V across every pool leaf (COW fault)."""
+        def cp(pool):
+            if pool.ndim == 4:                     # (NB, bs, KV, hd)
+                return pool.at[dst].set(pool[src])
+            return pool.at[:, dst].set(pool[:, src])   # scan: (G, NB, ...)
+        self.cache = jax.tree.map(cp, self.cache)
+
+    def _scatter_prefill(self, slot: int, row_cache, count: int) -> None:
+        """Host-scatter a one-chunk dense prefill row into the slot's
+        blocks.  The fast admission path runs stock ``T.prefill`` on a
+        chunk-length buffer — the same compute the dense engine's padded
+        prefill does, so the scattered K/V is bit-identical to the dense
+        pool's rows (positions >= count were zeroed by true_len)."""
+        bs = self.paged.block_size
+        blocks = self._slot_blocks[slot][: self.paged.blocks_for(count)]
+
+        def scatter(pool, row):
+            if pool.ndim == 4:                     # rest: row (1, C, ...)
+                for i, blk in enumerate(blocks):
+                    pool = pool.at[blk].set(row[0, i * bs:(i + 1) * bs])
+                return pool
+            for i, blk in enumerate(blocks):       # scan: row (G, 1, C, ...)
+                pool = pool.at[:, blk].set(row[:, 0, i * bs:(i + 1) * bs])
+            return pool
+
+        row = {k: v for k, v in row_cache.items() if k != "pos"}
+        self.cache = jax.tree.map(scatter, self.cache, row)
+
+    def _preemption_victim(self) -> int | None:
+        """Youngest in-flight request (latest submitted_at, ties toward
+        the higher slot): cheapest to recompute, fairest to the oldest
+        streams."""
+        best, best_t = None, -np.inf
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            t = r.submitted_at if r.submitted_at is not None else 0.0
+            if t >= best_t:
+                best, best_t = i, t
+        return best
+
+    def _preempt(self, slot: int) -> None:
+        """Preempt-by-recompute: free the victim's blocks and requeue it
+        at the FRONT.  Its generated tokens ride along, so re-admission
+        re-prefills prompt+generated and the stream continues exactly
+        where it stopped (greedy decode: token-identical)."""
+        req = self.slots[slot]
+        if req is None:
+            return
+        self.n_preempted += 1
+        self._release_slot(slot)
+        self.slots[slot] = None
+        self.slot_pos[slot] = 0
+        self._nan_strikes[slot] = 0
+        if len(self.queue) >= self.queue_capacity:
+            req.status = "rejected"
+            req.finished_at = self.clock()
+            self.n_rejected += 1
+            self.completed.append(req)
+        else:
+            req.status = "queued"
+            self.queue.appendleft(req)
+
+    def _admit_paged(self) -> None:
+        """FIFO admission into free slots: reuse any cached prompt
+        prefix (fork its blocks), reserve the first chunk's blocks, and
+        register the request for chunked prefill.  Block shortage is a
+        head-of-line wait, like the power gate."""
+        if self._draining:
+            return
+        p = self.paged
+        bs = p.block_size
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            req_cfg = self._as_layer_vector(req.approx_cfg)
+            pinned = req.approx_cfg is not None
+            if not self._admission_power_ok(req_cfg, pinned):
+                break
+            # resumed (preempted) requests re-prefill prompt+generated;
+            # the LAST generated token stays out — it is the next decode
+            # input, exactly as if the preemption never happened
+            toks = np.asarray(req.prompt, np.int32).reshape(-1)
+            resumed = bool(req.tokens)
+            if resumed:
+                toks = np.concatenate(
+                    [toks, np.asarray(req.tokens[:-1], np.int32)])
+            if toks.size >= self.max_len:
+                self.queue.popleft()
+                req.status = "rejected"
+                req.finished_at = self.clock()
+                self.n_rejected += 1
+                self.completed.append(req)
+                continue
+            shared = self.allocator.match_prefix(toks)
+            start = len(shared) * bs
+            first_end = min(toks.size, start + p.prefill_chunk)
+            need = p.blocks_for(first_end) - len(shared)
+            if not self.allocator.can_alloc(need):
+                break                      # wait for blocks, FIFO order
+            self.queue.popleft()
+            req.status = "active"
+            self._nan_strikes[slot] = 0
+            self.slot_pinned[slot] = pinned
+            self.slot_cfg[slot] = req_cfg
+            blocks = self.allocator.fork(shared)
+            self.n_shared_blocks += len(shared)
+            self._slot_blocks[slot] = blocks
+            self.block_tables[slot] = ZERO_BLOCK
+            self.block_tables[slot, :len(blocks)] = blocks
+            self.seq_lens[slot] = start
+            self.slot_pos[slot] = start
+            self._prefill_progress[slot] = {"tokens": toks,
+                                            "next": start,
+                                            "resumed": resumed}
+            self.slots[slot] = req
+
+    def _register_prefix_blocks(self, slot: int, toks: np.ndarray) -> None:
+        """Publish the slot's FULL prompt blocks for prefix reuse, keyed
+        by the token prefix they hold.  Full blocks are never written
+        again (decode appends past them), so sharing them is safe
+        without a copy; shared keys that already exist are no-ops."""
+        bs = self.paged.block_size
+        blocks = self._slot_blocks[slot]
+        for i in range(toks.size // bs):
+            key = tuple(int(t) for t in toks[: (i + 1) * bs])
+            self.allocator.register_prefix(key, blocks[i])
+
+    def _advance_prefills(self) -> None:
+        """Advance every mid-prefill slot by ONE chunk this tick —
+        chunked prefill interleaves with decode instead of monopolizing
+        ticks.  Single-chunk fresh prompts take the fast path (stock
+        prefill + host scatter: bit-identical K/V to the dense engine);
+        continuations run the paged chunk executable."""
+        p = self.paged
+        bs, C = p.block_size, p.prefill_chunk
+        for slot in sorted(self._prefill_progress):
+            prog = self._prefill_progress[slot]
+            toks, start = prog["tokens"], prog["next"]
+            count = int(min(C, toks.size - start))
+            end = start + count
+            have = len(self._slot_blocks[slot])
+            need = p.blocks_for(end) - have
+            if need > 0:
+                if not self.allocator.can_alloc(need):
+                    continue               # pool short; retry next tick
+                new = self.allocator.alloc_n(need)
+                self._slot_blocks[slot].extend(new)
+                self.block_tables[slot, have:have + need] = new
+            req = self.slots[slot]
+            cfg_vec = (self.slot_cfg[slot] if self.slot_pinned[slot]
+                       else self.approx_cfg)
+            acfg = self._replicate(cfg_vec)
+            buf = np.zeros((1, C), np.int32)
+            buf[0, :count] = toks[start:end]
+            tokens = self._replicate(jnp.asarray(buf))
+            if start == 0 and toks.size <= C:
+                logits, row_cache = self._prefill(
+                    self.params, tokens, acfg,
+                    jnp.asarray(count, jnp.int32))
+                self._scatter_prefill(slot, row_cache, count)
+            else:
+                logits, new_leaves = self._prefill_chunk(
+                    self.params, self._paged_operands(), tokens,
+                    jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(start, jnp.int32),
+                    jnp.asarray(count, jnp.int32), acfg)
+                self.cache = new_leaves
+            self.n_prefill_tokens += count       # TRUE tokens advanced
+            self._count_energy(C, cfg_vec, "prefill")  # executed width
+            self.seq_lens[slot] = end
+            self.slot_pos[slot] = end
+            prog["next"] = end
+            if end == toks.size:
+                del self._prefill_progress[slot]
+                self._register_prefix_blocks(slot, toks)
+                if not prog["resumed"]:
+                    self.rng, k = jax.random.split(self.rng)
+                    first = sample(logits, k,
+                                   temperature=req.temperature)
+                    req.tokens.append(int(first[0]))
+                if req.first_token_at is None:
+                    req.first_token_at = self.clock()
+
+    def _ensure_write_blocks(self, decodable: list[int]) -> list[int]:
+        """Give every decode row a writable tail block for this tick's
+        K/V scatter; preempt the youngest request when the pool runs
+        dry.  Returns the rows that still hold a slot afterwards."""
+        bs = self.paged.block_size
+        rows: list[int] = []
+        for i in decodable:
+            if self.slots[i] is None:
+                continue
+            page = int(self.seq_lens[i]) // bs
+            if page >= len(self._slot_blocks[i]):
+                while not self.allocator.can_alloc(1):
+                    victim = self._preemption_victim()
+                    if victim is None:
+                        break
+                    self._preempt(victim)
+                    if victim in rows:
+                        rows.remove(victim)
+                    if victim == i:
+                        break
+                if self.slots[i] is None:
+                    continue               # preempted itself
+                blk = self.allocator.alloc()
+                self._slot_blocks[i].append(blk)
+                self.block_tables[i, page] = blk
+            else:
+                # defensive COW: normal flow never shares a partial
+                # block (match_prefix only returns FULL blocks), but a
+                # shared tail must never be written in place
+                old = self._slot_blocks[i][page]
+                blk, copied = self.allocator.ensure_writable(old)
+                if copied:
+                    self._copy_block(old, blk)
+                    self._slot_blocks[i][page] = blk
+                    self.block_tables[i, page] = blk
+            rows.append(i)
+        return rows
+
+    def _step_paged(self):
+        """One paged tick: the dense tick's preamble, then chunked
+        prefill for mid-prompt slots and ONE batched decode step for the
+        rest — through the same compiled executables every tick."""
+        inj = self.fault_injector
+        if inj is not None:
+            inj.begin_tick(self)
+        if self.brownout is not None:
+            self.brownout.on_tick(self)
+        now = self.clock()
+        self._expire(now)
+        in_flight = bool(self.queue
+                         or any(s is not None for s in self.slots))
+        if now < self._backoff_until:
+            return in_flight
+        self._admit_paged()
+        self._advance_prefills()
+        active = self._ensure_write_blocks(
+            [i for i, r in enumerate(self.slots)
+             if r is not None and i not in self._prefill_progress])
+        if not active:
+            return bool(self.queue
+                        or any(s is not None for s in self.slots))
+        token = np.zeros((self.max_batch, 1), dtype=np.int32)
+        active_mask = np.zeros(self.max_batch, dtype=bool)
+        for i in active:
+            token[i, 0] = self.slots[i].tokens[-1]
+            active_mask[i] = True
+        pool_cfg = self._pool_cfg()
+        cache = self._paged_operands(active_mask)
+        token = self._replicate(token)
+        try:
+            if inj is not None:
+                inj.check_step_fail()
+            logits, new_leaves = self._decode(self.params, cache, token,
+                                              self._replicate(pool_cfg))
+            if inj is not None:
+                logits = inj.corrupt_logits(logits, active)
+        except Exception as err:  # noqa: BLE001 — retry path, like _step
+            self._record_failure(active, now, err)
+            return True
+        # NaN/Inf guard BEFORE the pool commits: rollback stays free —
+        # the scatters happened in the discarded new leaves and
+        # seq_lens has not advanced, so the freshly ensured write
+        # blocks are simply rewritten on the retry tick
+        rows = np.asarray(logits)
+        bad = [i for i in active if not np.isfinite(rows[i]).all()]
+        if bad:
+            self._quarantine(bad, pool_cfg)
+            return True
+        self.cache = new_leaves
+        self._retry_streak = 0
+        self.n_decode_steps += 1
+        self._count_energy(len(active), pool_cfg)
+        feedback = 1 if inj is None else inj.probe_multiplicity()
+        if self.scheduler is not None:
+            for _ in range(feedback):
+                # `cache` still holds the PRE-step operands (tables,
+                # lens, old pool), so shadow probes re-run this exact
+                # step through the same executable
+                self.scheduler.on_step(self, active, cache, token,
+                                       logits, pool_cfg)
+        self.rng, k = jax.random.split(self.rng)
+        temps = np.asarray([r.temperature if r is not None else 0.0
+                            for r in self.slots], np.float32)
+        greedy = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        if np.any(temps[active] > 0.0):
+            safe = np.where(temps > 0.0, temps, 1.0).astype(np.float32)
+            drawn = np.asarray(sample(
+                logits / jnp.asarray(safe)[:, None], k))
+            nxt = np.where(temps > 0.0, drawn, greedy)
+        else:
+            nxt = greedy
+        for i in active:
+            req = self.slots[i]
+            self.seq_lens[i] += 1
+            req.tokens.append(int(nxt[i]))
+            self.slot_pos[i] += 1
+            if (len(req.tokens) >= req.max_new_tokens
+                    or self.slot_pos[i] >= self.max_len - 1):
+                req.done = True
+                req.status = "done"
+                req.finished_at = self.clock()
+                # repro-lint: disable=bounded-state — completed holds the run()'s return payload, one entry per submitted request; bounding it would silently drop finished results
+                self.completed.append(req)
+                self.slots[i] = None
+                self._nan_strikes[i] = 0
+                self._release_slot(i)
+                self.slot_pos[i] = 0
+        if (self.snapshot_every and self.checkpointer is not None
+                and self.n_decode_steps % self.snapshot_every == 0):
+            self.save_snapshot()
+        if self.scheduler is not None:
+            self.scheduler.on_tick(self)
+        return True
 
     # -- main loop ------------------------------------------------------
     def step(self):
@@ -738,6 +1222,8 @@ class Engine:
             return self._step()
 
     def _step(self):
+        if self.paged is not None:
+            return self._step_paged()
         inj = self.fault_injector
         if inj is not None:
             inj.begin_tick(self)
@@ -944,7 +1430,7 @@ class Engine:
         """The array half of a snapshot (Checkpointer leaves must be
         arrays): KV cache, config tensors, per-slot numpy state, and
         the sampler key — everything token generation depends on."""
-        return {"cache": jax.tree.map(np.asarray, self.cache),
+        arrs = {"cache": jax.tree.map(np.asarray, self.cache),
                 "approx_cfg": self.approx_cfg,
                 "slot_cfg": self.slot_cfg,
                 # int32 on disk: positions/strikes fit comfortably, and
@@ -953,6 +1439,11 @@ class Engine:
                 "slot_pinned": self.slot_pinned,
                 "nan_strikes": self._nan_strikes.astype(np.int32),
                 "rng": np.asarray(self.rng)}
+        if self.paged is not None:
+            arrs["block_tables"] = self.block_tables
+            arrs["seq_lens"] = self.seq_lens
+            arrs["refcounts"] = np.array(self.allocator.refcounts)
+        return arrs
 
     _SNAP_COUNTERS = ("n_decode_steps", "n_prefill_tokens",
                       "mac_energy_pj_per_param",
@@ -981,6 +1472,23 @@ class Engine:
                 "completed": [_pack_request(r) for r in self.completed],
                 "counters": {k: getattr(self, k)
                              for k in self._SNAP_COUNTERS}}
+        if self.paged is not None:
+            # allocator refcounts travel as an array; the prefix index
+            # and per-slot ownership are msgpack-able structures
+            meta["paged"] = {
+                "prefix_index": [
+                    [list(map(int, key)), int(blk)]
+                    for key, blk in sorted(
+                        self.allocator._prefix_index.items())],
+                "slot_blocks": [[int(b) for b in bl]
+                                for bl in self._slot_blocks],
+                "prefill_progress": {
+                    str(s): {"tokens": [int(t) for t in pr["tokens"]],
+                             "next": int(pr["next"]),
+                             "resumed": bool(pr["resumed"])}
+                    for s, pr in self._prefill_progress.items()},
+                "n_preempted": int(self.n_preempted),
+                "n_shared_blocks": int(self.n_shared_blocks)}
         self.checkpointer.save(step, self._snapshot_arrays(), meta)
         self._last_snapshot = step
         return step
@@ -1009,6 +1517,23 @@ class Engine:
         self._nan_strikes = np.array(tree["nan_strikes"],
                                      dtype=np.int64)
         self.rng = jnp.asarray(np.asarray(tree["rng"]), jnp.uint32)
+        if self.paged is not None:
+            self.block_tables = np.array(tree["block_tables"], np.int32)
+            self.seq_lens = np.array(tree["seq_lens"], np.int32)
+            pg = meta["paged"]
+            self.allocator.load_state_dict(
+                {"refcounts": np.asarray(tree["refcounts"]),
+                 "prefix_index": pg["prefix_index"]})
+            self._slot_blocks = [[int(b) for b in bl]
+                                 for bl in pg["slot_blocks"]]
+            self._prefill_progress = {
+                int(s): {"tokens": np.asarray(pr["tokens"], np.int32),
+                         "next": int(pr["next"]),
+                         "resumed": bool(pr["resumed"])}
+                for s, pr in pg["prefill_progress"].items()}
+            self.n_preempted = max(self.n_preempted,
+                                   int(pg["n_preempted"]))
+            self.n_shared_blocks = int(pg["n_shared_blocks"])
         self.slots = [_unpack_request(d) for d in meta["slots"]]
         self.queue.clear()
         self.queue.extend(_unpack_request(d) for d in meta["queue"])

@@ -467,6 +467,11 @@ class PowerBudgetScheduler:
         self.history.append({
             "event": "retune", "tick": self.tick,
             "time": engine.clock(),
+            # paged engines (PR 8) report the free-block watermark; the
+            # brownout folds it into the budget scale this loop serves
+            # (getattr: the scheduler also runs against engine stubs)
+            "kv_utilization": getattr(engine, "backpressure",
+                                      {}).get("kv_utilization"),
             "budget_pj_per_token": self.budget_pj_per_token,
             "modeled_pj_per_token": self._energy_pj(assignment),
             "measured_pj_per_token": measured,

@@ -1,0 +1,26 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""BAD (paged-KV zero-retrace): block tables / page indices / sequence
+lengths are per-tick DATA operands of the one compiled decode step —
+letting them pick shapes or steer Python control flow compiles one
+executable per occupancy (rule: cfg-shape)."""
+import jax.numpy as jnp
+
+
+def f(x, seq_len):
+    mask = jnp.zeros((seq_len, 4))       # length-dependent shape
+    return x + mask.sum()
+
+
+def g(kv, block_table):
+    if block_table[0] > 0:               # Python branch on the table
+        return kv * 2.0
+    return kv
+
+
+def h(x, seq_lens):
+    pos = jnp.arange(seq_lens)           # length-dependent iota
+    return x + pos.sum()
+
+
+def k(x, page_idx):
+    return x.reshape(page_idx, -1)       # table value as a shape

@@ -1,0 +1,21 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""GOOD: tables and lengths stay data — gathers, masks and writes are
+indexed by them, but every shape comes from static array metadata."""
+import jax.numpy as jnp
+
+
+def f(x, seq_len):
+    mask = jnp.zeros((x.shape[0], 4))          # shape from the DATA
+    pos = jnp.arange(x.shape[1])
+    return x + (pos[None, :] < seq_len).astype(x.dtype) @ mask
+
+
+def g(kv_pool, block_table):
+    if block_table is None:                    # Python-default dispatch
+        return kv_pool
+    return kv_pool[block_table]                # gather: table as INDEX
+
+
+def h(x, seq_lens):
+    posv = seq_lens[:, None]                   # data operand, not shape
+    return x * jnp.where(posv > 0, 1.0, 0.0)

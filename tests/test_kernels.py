@@ -145,3 +145,59 @@ def test_flash_attention_block_shape_invariance():
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
                                    rtol=1e-5, atol=1e-5)
+
+
+# --- paged gather-attention decode (PR 8) -----------------------------------
+
+def _paged_case(b, pages, bs, h, kv, hd, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    nb = 2 + b * pages
+    q = jax.random.normal(ks[0], (b, 1, h, hd))
+    k_pool = jax.random.normal(ks[1], (nb, bs, kv, hd))
+    v_pool = jax.random.normal(ks[2], (nb, bs, kv, hd))
+    # zero the reserved ZERO_BLOCK like the engine pool
+    k_pool = k_pool.at[0].set(0.0)
+    v_pool = v_pool.at[0].set(0.0)
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(1, pages * bs + 1, size=b).astype(np.int32)
+    tables = np.zeros((b, pages), np.int32)
+    nxt = 2
+    for i in range(b):
+        for j in range(-(-int(lens[i]) // bs)):
+            tables[i, j] = nxt
+            nxt += 1
+    return q, k_pool, v_pool, jnp.asarray(tables), jnp.asarray(lens)
+
+
+@pytest.mark.parametrize("b,pages,bs,h,kv,hd,cap", [
+    (2, 4, 16, 4, 4, 128, 0.0),
+    (3, 2, 8, 4, 2, 128, 0.0),      # GQA, partial last block
+    (1, 4, 16, 2, 1, 128, 0.0),     # MQA
+    (2, 3, 16, 2, 2, 64, 50.0),     # hd pad + softcap
+])
+def test_paged_attention_kernel_matches_reference(b, pages, bs, h, kv, hd,
+                                                  cap):
+    from repro.kernels.flash_attention.paged_attention import (
+        paged_attention_reference, paged_decode_attention)
+    q, kp, vp, tables, lens = _paged_case(b, pages, bs, h, kv, hd, seed=b)
+    out = paged_decode_attention(q, kp, vp, tables, lens, logit_cap=cap,
+                                 interpret=True)
+    ref = paged_attention_reference(q, kp, vp, tables, lens, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_unowned_pages_are_inert():
+    """Rows must not read pages they don't own: scribbling on every
+    block OUTSIDE the tables (incl. TRASH_BLOCK) changes nothing."""
+    from repro.kernels.flash_attention.paged_attention import (
+        paged_decode_attention)
+    q, kp, vp, tables, lens = _paged_case(2, 4, 16, 4, 4, 128, seed=11)
+    owned = {0} | {int(x) for x in np.asarray(tables).ravel()}
+    a = paged_decode_attention(q, kp, vp, tables, lens, interpret=True)
+    for blk in range(kp.shape[0]):
+        if blk not in owned:
+            kp = kp.at[blk].set(999.0)
+            vp = vp.at[blk].set(-999.0)
+    b = paged_decode_attention(q, kp, vp, tables, lens, interpret=True)
+    assert jnp.array_equal(a, b)

@@ -29,11 +29,12 @@ BAD = {
     "bad_resilience_tick": "bounded-state",       # PR 7 chaos tick path
     "bad_injected_clock": "injected-clock",       # historical: PR 4
     "bad_pallas_hygiene": "pallas-hygiene",
+    "bad_table_shape": "cfg-shape",               # PR 8 paged-KV operands
 }
 GOOD = ["good_trace_safety", "good_cfg_shape", "good_single_rounding",
         "good_bounded_state", "good_resilience_tick",
         "good_injected_clock", "good_pallas_hygiene",
-        "good_suppression"]
+        "good_suppression", "good_table_shape"]
 
 
 @pytest.mark.parametrize("stem,rule_id", sorted(BAD.items()))

@@ -12,7 +12,13 @@ from .engine import FileContext, rule
 
 SRC = "src/repro/"
 CONFIG_NAMES = {"cfg", "config", "approx_cfg", "approx_config", "error_cfg"}
-SCALAR_PREFETCH = {"cfg_ref", "rows_ref", "xscale_ref"}
+# paged-KV data operands: block tables / page indices / sequence lengths
+# are per-tick DATA (the paged engine's zero-retrace invariant) and must
+# never become shapes, like the error config above
+TABLE_NAMES = {"block_table", "block_tables", "tables", "page_idx",
+               "page_table", "page_indices", "seq_len", "seq_lens",
+               "cache_len"}
+SCALAR_PREFETCH = {"cfg_ref", "rows_ref", "xscale_ref", "bt_ref", "len_ref"}
 LAX_HOFS = {"scan", "cond", "while_loop", "fori_loop", "switch", "map",
             "associative_scan"}
 TRACED_DECOS = {"jit", "vmap", "grad", "value_and_grad", "when",
@@ -241,12 +247,16 @@ def cfg_shape(ctx: FileContext):
     """Config names must not flow into shape positions or Python control
     flow: a shape that depends on the config forces one executable per
     config value — exactly the retrace explosion the runtime knob
-    exists to avoid."""
+    exists to avoid.  The paged-KV table/length names (TABLE_NAMES) are
+    held to the same bar: block tables and sequence lengths are data
+    operands of the one compiled decode step, so a shape or traced
+    branch derived from them retraces per occupancy instead."""
     if not ctx.in_scope(SRC + "nn/", SRC + "kernels/", SRC + "serve/"):
         return
     shape_ctors = {"zeros", "ones", "full", "empty", "arange"}
+    watched = CONFIG_NAMES | TABLE_NAMES
 
-    def problematic(test: ast.AST) -> ast.Name | None:
+    def problematic(test: ast.AST, names=watched) -> ast.Name | None:
         """First config Name in `test` that is not inside an isinstance
         call or an `is (not) None` comparison, with the whole test
         exempt when it isinstance-dispatches on that very name."""
@@ -255,8 +265,8 @@ def cfg_shape(ctx: FileContext):
             if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
                     and sub.func.id == "isinstance":
                 exempt_names.update(n.id for n in _bare_names(
-                    sub.args[0], CONFIG_NAMES, ctx.parents))
-        for name in _bare_names(test, CONFIG_NAMES, ctx.parents):
+                    sub.args[0], names, ctx.parents))
+        for name in _bare_names(test, names, ctx.parents):
             if name.id in exempt_names:
                 continue
             par = ctx.parents.get(name)
@@ -293,10 +303,12 @@ def cfg_shape(ctx: FileContext):
                 and (branch_everywhere or node in traced_nodes):
             bad = problematic(node.test)
             if bad is not None:
+                kind = ("config" if bad.id in CONFIG_NAMES
+                        else "block-table/length")
                 yield ctx.finding(
                     node.test, "cfg-shape",
-                    f"Python branch on config value '{bad.id}' — control "
-                    "flow on the traced knob retraces per config; use "
+                    f"Python branch on {kind} value '{bad.id}' — control "
+                    "flow on a traced data operand retraces per value; use "
                     "jnp.where / lax.cond")
         if not isinstance(node, ast.Call):
             continue
@@ -315,13 +327,15 @@ def cfg_shape(ctx: FileContext):
         for arg in shape_args:
             if _has_shapeish(arg):
                 continue     # jnp.shape(cfg)/cfg.shape is static metadata
-            hits = _bare_names(arg, CONFIG_NAMES, ctx.parents)
+            hits = _bare_names(arg, watched, ctx.parents)
             if hits:
+                kind = ("config" if hits[0].id in CONFIG_NAMES
+                        else "block-table/length")
                 yield ctx.finding(
                     node, "cfg-shape",
-                    f"config value '{hits[0].id}' in a shape position of "
-                    f"{'.'.join(chain)}() — shapes must be config-"
-                    "independent (zero-retrace)")
+                    f"{kind} value '{hits[0].id}' in a shape position of "
+                    f"{'.'.join(chain)}() — shapes must be independent of "
+                    "traced data operands (zero-retrace)")
                 break
 
 
