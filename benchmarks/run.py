@@ -595,6 +595,28 @@ def bench_paged_serving():
         json.dump(out, fh, indent=2)
 
 
+def bench_speculative():
+    """The PR-9 tentpole quantified: approx-draft self-speculation.
+
+    The knob's draft model is FREE: eligible decode ticks draft k
+    tokens at an aggressive low-power config and verify them in ONE
+    service-config pass through the same executables.  The bars
+    (speculative stream identical to non-speculative exact greedy,
+    zero retraces across a live (k, draft-cfg) sweep, > 1 token per
+    verify weight-pass, serve pJ/token below the exact baseline) are
+    ENFORCED in ``benchmarks/speculative.py``: a violation raises and
+    becomes the ERROR row CI greps for.  Emits BENCH_spec_decode.json
+    (CI artifact).
+    """
+    import json
+
+    from benchmarks.speculative import run_speculative
+
+    out = run_speculative()
+    with open("BENCH_spec_decode.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+
+
 BENCHES = {
     "table1": bench_table1_multiplier_metrics,
     "fig5": bench_fig5_power_improvement,
@@ -609,6 +631,7 @@ BENCHES = {
     "resilience": bench_resilience,
     "sharded_decode": bench_sharded_decode,
     "paged_serving": bench_paged_serving,
+    "speculative": bench_speculative,
     "lm_energy": bench_lm_energy_model,
     "roofline": bench_roofline_table,
     "runtime_config": bench_runtime_config_switch,
@@ -617,7 +640,7 @@ BENCHES = {
 # every bench that writes a BENCH_*.json artifact — `run.py all`
 # regenerates the full artifact set in one command
 JSON_BENCHES = ["pallas_path", "moe_path", "scheduler", "resilience",
-                "sharded_decode", "paged_serving"]
+                "sharded_decode", "paged_serving", "speculative"]
 
 
 def main() -> None:

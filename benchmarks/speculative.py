@@ -1,0 +1,189 @@
+"""The PR-9 tentpole quantified: approx-draft self-speculative decoding
+(DESIGN.md §12).
+
+Four measurements on the briefly-trained demo LM, bars ENFORCED (a
+violation raises and becomes the harness's ERROR row, which CI greps
+for):
+
+* **token identity** — the speculative stream (dense AND paged) must be
+  IDENTICAL to the non-speculative exact greedy stream: every emitted
+  token is the verifier's own argmax, so this is identity by
+  construction and any diff is a rewind/window bug;
+* **zero retraces** — a (k, draft-cfg) sweep retargeted live through
+  ``Engine.set_spec`` must keep every jit cache at ONE entry: k is a
+  host loop count and draft_cfg is traced data, so sweeping them
+  compiles nothing;
+* **throughput** — tokens emitted per verify weight-pass
+  (``n_spec_emitted / n_verify_steps`` = 1 + mean accepted drafts) must
+  exceed 1.0: speculation must beat one-token-per-step decoding;
+* **energy** — modeled serve pJ per emitted token under speculation
+  (drafts billed at the draft config, verifies at the service config)
+  must come in BELOW the non-speculative exact baseline.
+
+Acceptance rate per (k, draft_cfg) cell is reported alongside.  All
+timings are CPU correctness-path numbers; TPU is the perf target.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.paged_serving import _drain, _model, _paged_engine
+
+
+def _reqs(seed, n=4, plen=16, new=24):
+    from repro.serve.engine import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(1, 64, size=plen),
+                    max_new_tokens=new) for i in range(n)]
+
+
+def _dense_engine(params, cfg, spec=None):
+    from repro.serve.engine import Engine
+    return Engine(params, cfg, max_batch=4, max_len=64, prefill_pad=16,
+                  spec=spec)
+
+
+def _paged_spec_engine(params, cfg, spec):
+    from repro.serve.engine import Engine
+    from repro.serve.paged_cache import PagedCacheConfig
+    return Engine(params, cfg, max_batch=4, max_len=64,
+                  paged=PagedCacheConfig(num_blocks=2 + 24,
+                                         block_size=16,
+                                         prefill_chunk=16),
+                  spec=spec)
+
+
+def _serve_pj_per_token(eng):
+    """Modeled serve-side MAC pJ per EMITTED token — drafts, verifies,
+    prefills, and plain decodes all included; probe overhead excluded."""
+    return (eng.serve_mac_energy_pj_per_param * eng.macs_per_token
+            / max(eng.n_tokens_emitted, 1))
+
+
+def _identity_and_sweep(params, cfg):
+    """One dense + one paged speculative engine, retargeted across the
+    (k, draft_cfg) grid; every wave's stream must equal the exact
+    greedy baseline captured from a non-speculative engine."""
+    from repro.serve.speculative import SpecConfig
+    base = _dense_engine(params, cfg)
+    for r in _reqs(0):
+        base.submit(r)
+    want = _drain(base)
+
+    sweep = ((3, 8), (1, 5), (5, 20), (2, 31))
+    spec0 = SpecConfig(draft_cfg=sweep[0][1], k=sweep[0][0], max_k=5)
+    dense = _dense_engine(params, cfg, spec=spec0)
+    paged = _paged_spec_engine(params, cfg, spec0)
+    cells = []
+    for k, dcfg in sweep:
+        spec = SpecConfig(draft_cfg=dcfg, k=k, max_k=5)
+        for eng, name in ((dense, "dense"), (paged, "paged")):
+            eng.set_spec(spec)
+            t0, a0, v0 = (eng.n_spec_ticks, eng.n_spec_emitted,
+                          eng.n_verify_steps)
+            for r in _reqs(0):
+                eng.submit(r)
+            got = _drain(eng)
+            if got != want:
+                raise RuntimeError(
+                    f"speculative {name} stream (k={k}, draft_cfg={dcfg}) "
+                    f"NOT identical to exact greedy: {got} vs {want}")
+            v = eng.n_verify_steps - v0
+            cells.append({"path": name, "k": k, "draft_cfg": dcfg,
+                          "spec_ticks": eng.n_spec_ticks - t0,
+                          "tokens_per_verify_step":
+                              (eng.n_spec_emitted - a0) / max(v, 1)})
+        paged.allocator.check_consistency(paged._slot_blocks)
+
+    caches = {"dense_decode": dense._decode._cache_size(),
+              "dense_verify": dense._verify._cache_size(),
+              "paged_decode": paged._decode._cache_size(),
+              "paged_prefill_chunk": paged._prefill_chunk._cache_size()}
+    bad = {k: v for k, v in caches.items() if v != 1}
+    if bad:
+        raise RuntimeError(f"(k, draft-cfg) sweep retraced: {bad}")
+    return {"sweep": cells, "executables": caches, "identical": True}
+
+
+def _throughput_and_energy(params, cfg):
+    """Spec vs non-spec exact on the same workload: tokens per verify
+    weight-pass > 1 and serve pJ/emitted-token strictly below exact."""
+    from repro.serve.speculative import SpecConfig
+
+    def mk_dense(s):
+        return _dense_engine(params, cfg, spec=s)
+
+    def mk_paged(s):
+        if s is None:
+            return _paged_engine(params, cfg, max_batch=4, max_len=64,
+                                 num_blocks=2 + 24)
+        return _paged_spec_engine(params, cfg, s)
+
+    rows = []
+    for name, mk in (("dense", mk_dense), ("paged", mk_paged)):
+        base = mk(None)
+        for r in _reqs(1):
+            base.submit(r)
+        t0 = time.perf_counter()
+        want = _drain(base)
+        base_s = time.perf_counter() - t0
+        base_pj = _serve_pj_per_token(base)
+
+        spec = mk(SpecConfig(draft_cfg=8, k=3, max_k=5))
+        for r in _reqs(1):
+            spec.submit(r)
+        t0 = time.perf_counter()
+        got = _drain(spec)
+        spec_s = time.perf_counter() - t0
+        if got != want:
+            raise RuntimeError(f"spec {name} A/B stream diverged")
+        tv = spec.n_spec_emitted / max(spec.n_verify_steps, 1)
+        spec_pj = _serve_pj_per_token(spec)
+        if tv <= 1.0:
+            raise RuntimeError(
+                f"throughput bar violated ({name}): "
+                f"{tv:.2f} tokens/verify-step (must be > 1)")
+        if spec_pj >= base_pj:
+            raise RuntimeError(
+                f"energy bar violated ({name}): spec {spec_pj:.0f} "
+                f"pJ/token >= exact {base_pj:.0f}")
+        # accepted drafts = emitted minus the one correction/bonus token
+        # each slot-verify contributes; rate is over tokens DRAFTED
+        acc = ((spec.n_spec_emitted - spec.n_verify_steps)
+               / max(spec.n_draft_tokens, 1))
+        rows.append({"path": name, "k": 3, "draft_cfg": 8,
+                     "tokens_per_verify_step": tv,
+                     "acceptance_rate": acc,
+                     "spec_pj_per_token": spec_pj,
+                     "exact_pj_per_token": base_pj,
+                     "energy_frac": spec_pj / base_pj,
+                     "spec_wall_s": spec_s, "exact_wall_s": base_s})
+    return {"ab": rows}
+
+
+def run_speculative() -> dict:
+    params, cfg = _model()
+    out = {"bench": "speculative", "mode": "cpu-interpret",
+           "model": {"n_layers": 2, "d_model": 32, "vocab": 64}}
+    t0 = time.perf_counter()
+    out["identity_sweep"] = _identity_and_sweep(params, cfg)
+    print(f"spec_identity_sweep,{(time.perf_counter()-t0)*1e6:.1f},"
+          f"identical=True;cells={len(out['identity_sweep']['sweep'])};"
+          f"executables=1_each")
+    t0 = time.perf_counter()
+    out["throughput_energy"] = _throughput_and_energy(params, cfg)
+    for r in out["throughput_energy"]["ab"]:
+        print(f"spec_ab_{r['path']},{(time.perf_counter()-t0)*1e6:.1f},"
+              f"tokens_per_verify={r['tokens_per_verify_step']:.2f};"
+              f"acceptance={r['acceptance_rate']*100:.0f}%;"
+              f"pj_frac_of_exact={r['energy_frac']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    result = run_speculative()
+    with open("BENCH_spec_decode.json", "w") as fh:
+        json.dump(result, fh, indent=2)

@@ -245,6 +245,40 @@ def main():
           f"{eng_r.brownout.n_escalations} brownout escalations) — "
           f"every request finished, nothing recompiled")
 
+    # ---- approx-draft speculative decoding (PR 9) -----------------------
+    # The knob's last trick: an aggressive low-power config IS a free
+    # draft model (DESIGN.md §12).  Engine(spec=SpecConfig(...)) makes
+    # eligible greedy ticks draft k tokens at draft_cfg and verify all
+    # of them in ONE service-config pass — every emitted token is the
+    # VERIFIER's own argmax, so the stream matches plain greedy by
+    # construction, and a live (k, draft-cfg) retarget via set_spec
+    # compiles nothing (k is a host loop count, draft_cfg traced data;
+    # benchmarks/run.py speculative enforces the identity/energy bars
+    # on a trained model).
+    from repro.serve.speculative import SpecConfig
+    eng_v = Engine(params, cfg, max_batch=3, max_len=64,
+                   spec=SpecConfig(draft_cfg=8, k=3, max_k=5))
+    eng_v.rng = jax.random.PRNGKey(0)
+    warm = None
+    for k, dcfg in ((3, 8), (2, 16), (5, 31)):
+        eng_v.set_spec(SpecConfig(draft_cfg=dcfg, k=k, max_k=5))
+        for i, p in enumerate(prompts[:3]):
+            eng_v.submit(Request(rid=700 + 10 * k + i, prompt=p,
+                                 max_new_tokens=8))
+        done, eng_v.completed = eng_v.run(), []
+        if warm is None:
+            warm = (eng_v._decode._cache_size(),
+                    eng_v._verify._cache_size())
+    assert (eng_v._decode._cache_size(),
+            eng_v._verify._cache_size()) == warm
+    tv = (eng_v.n_spec_emitted / eng_v.n_verify_steps
+          if eng_v.n_verify_steps else 0.0)
+    print(f"\nspeculative decoding: {eng_v.n_spec_ticks} spec ticks "
+          f"across a (k, draft-cfg) sweep, "
+          f"{eng_v.n_spec_emitted}/{eng_v.n_draft_tokens} "
+          f"emitted/drafted ({tv:.2f} tokens per verify pass) — "
+          f"draft retargets recompiled nothing")
+
     # ---- the sharded engine (PR 5) --------------------------------------
     # Engine(mapping=...) serves the SAME model TP-sharded over a
     # (data, model) mesh (DESIGN.md §8): params placed by their logical

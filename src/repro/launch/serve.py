@@ -42,6 +42,17 @@ concurrency scaler; geometry via --num-blocks/--block-size/
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --paged --max-batch 64 --num-blocks 258 --block-size 16 \
       --prefill-chunk 32 --requests 64
+
+Speculative decoding (DESIGN.md §12): --draft-cfg CFG turns on
+approx-draft self-speculation — eligible greedy decode ticks draft
+--draft-k tokens at the aggressive low-power CFG and verify them in
+ONE service-config pass, emitting the verifier's own tokens (stream
+identical to plain greedy by construction).  Composes with --paged and
+--budget-frac (the scheduler then drives draft depth as a second
+control axis):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --draft-cfg 8 --draft-k 3 [--paged]
 """
 from __future__ import annotations
 
@@ -114,6 +125,13 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens advanced per engine tick "
                          "(multiple of --block-size)")
+    ap.add_argument("--draft-cfg", type=int, default=None, metavar="CFG",
+                    help="speculative decoding: draft at this error "
+                         "config, verify at the service config "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--draft-k", type=int, default=3,
+                    help="draft depth per speculative tick (the "
+                         "scheduler may lower it live)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -174,11 +192,19 @@ def main():
         print(f"paged KV: {num_blocks} blocks x {args.block_size} tokens "
               f"({paged.usable_blocks * args.block_size} usable), "
               f"prefill chunk {args.prefill_chunk}")
+    spec = None
+    if args.draft_cfg is not None:
+        from repro.serve.speculative import SpecConfig
+        assert mapping is None, "--draft-cfg is single-host (DESIGN.md §12)"
+        spec = SpecConfig(draft_cfg=args.draft_cfg, k=args.draft_k,
+                          max_k=max(args.draft_k, 4))
+        print(f"speculative decoding: draft cfg {args.draft_cfg}, "
+              f"k={args.draft_k} (verify at the service config)")
     eng = Engine(params, cfg, max_batch=args.max_batch,
                  max_len=args.max_len, approx_cfg=args.approx_cfg,
                  scheduler=sched, mapping=mapping, param_specs=specs,
                  queue_capacity=args.queue_capacity, brownout=brownout,
-                 fault_injector=injector, paged=paged)
+                 fault_injector=injector, paged=paged, spec=spec)
     from repro.core.power_model import energy_per_token_pj
     exact_pj = energy_per_token_pj(
         np.zeros_like(eng.approx_cfg), eng.macs_per_token,
@@ -251,6 +277,13 @@ def main():
               f"{rr['expired']}, failed {rr['failed']}, retries "
               f"{rr['retries']}, nan events {rr['nan_events']}, "
               f"quarantined {rr['quarantined']}")
+    if spec is not None:
+        tv = (eng.n_spec_emitted / eng.n_verify_steps
+              if eng.n_verify_steps else 0.0)
+        print(f"speculative: {eng.n_spec_ticks} ticks, "
+              f"{eng.n_spec_emitted}/{eng.n_draft_tokens} "
+              f"emitted/drafted, {tv:.2f} tokens/verify-step, "
+              f"{eng.n_spec_aborts} aborts")
     if args.paged:
         bp = eng.backpressure
         print(f"paged: {eng.n_preempted} preemptions, "

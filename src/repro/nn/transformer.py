@@ -1139,6 +1139,141 @@ def decode_step(params, cfg: ModelConfig, cache, token, *,
     return logits, new_cache
 
 
+# ---------------------------------------------------------------------------
+# serving: speculative verify (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def verify_gate(cfg: ModelConfig):
+    """Speculative draft/verify covers the same model family as the
+    paged cache: all-'global' attention, float KV, decoder-only."""
+    if any(k != "global" for k in cfg.layer_kinds()):
+        raise ValueError("speculative verify needs an all-'global' "
+                         "pattern")
+    if cfg.kv_quant or cfg.kv_onehot_write:
+        raise ValueError("speculative verify is float-KV only (no "
+                         "kv_quant / kv_onehot_write)")
+    if cfg.encoder_decoder or cfg.vision_prefix_len:
+        raise ValueError("speculative verify does not cover "
+                         "encoder-decoder or vision-prefix models")
+
+
+def _verify_block(p, x, cl, cfg, positions, *, approx_cfg=0):
+    """One all-'global' layer over a W-token verify window against the
+    dense cache.  x: (B,W,d); cl: the layer's (B,S,KV,hd) K/V buffers;
+    positions: (W,) traced absolute entries of the window tokens.  The
+    window's K/V scatter into entries positions[w] (rows past the
+    buffer end drop — scatter, not dynamic-update-slice, so a clipped
+    tail can never shift the whole window), then every window position
+    attends causally over the full updated buffer."""
+    from .attention import NEG_INF, _repeat_kv
+    from .layers import apply_rope
+    res = x
+    h = _apply_norm(p["norm1"], x, cfg)
+    q = _proj(h, p["attn"]["wq"], approx_cfg, p["attn"].get("bq"), cfg,
+              cfg.n_heads)
+    k = _proj(h, p["attn"]["wk"], approx_cfg, p["attn"].get("bk"), cfg,
+              cfg.n_kv_heads)
+    v = _proj(h, p["attn"]["wv"], approx_cfg, p["attn"].get("bv"), cfg,
+              cfg.n_kv_heads)
+    if cfg.norm == "rms":
+        q = apply_rope(q, positions[None], cfg.rope_theta)
+        k = apply_rope(k, positions[None], cfg.rope_theta)
+    cl = dict(cl)
+    cl["k"] = cl["k"].at[:, positions].set(k.astype(cl["k"].dtype))
+    cl["v"] = cl["v"].at[:, positions].set(v.astype(cl["v"].dtype))
+    kc, vc = cl["k"], cl["v"]
+    k_r = _repeat_kv(kc, cfg.n_heads // cfg.n_kv_heads)
+    v_r = _repeat_kv(vc, cfg.n_heads // cfg.n_kv_heads)
+    scale = (cfg.query_scale if cfg.query_scale is not None
+             else cfg.head_dim ** -0.5)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k_r.astype(jnp.float32)) * scale
+    if cfg.attn_softcap > 0:
+        scores = softcap(scores, cfg.attn_softcap)
+    key_pos = jnp.arange(kc.shape[1])
+    valid = key_pos[None, :] <= positions[:, None]        # (W, S) causal
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("bhqk,bkhd->bqhd", w,
+                      v_r.astype(jnp.float32)).astype(q.dtype)
+    y = _attn_out(attn, p["attn"]["wo"], approx_cfg, cfg)
+    if cfg.post_norm:
+        y = _apply_norm(p["post1"], y, cfg)
+    x = res + y
+    res = x
+    h = _apply_norm(p["norm2"], x, cfg)
+    y = _mlp_apply(p["mlp"], h, cfg, approx_cfg)
+    if cfg.post_norm:
+        y = _apply_norm(p["post2"], y, cfg)
+    return res + y, cl
+
+
+def decode_verify(params, cfg: ModelConfig, cache, tokens, pos, *,
+                  approx_cfg=0):
+    """Score a W-token window in ONE pass against the dense cache — the
+    speculative-decoding verify step (DESIGN.md §12).
+
+    tokens: (B, W) int32 — row b holds ``[pending_input, draft_1 ..
+    draft_k]`` right-padded to the STATIC window W (= max_k + 1; the
+    live draft depth k only changes how many rows the host reads, so
+    every (k, draft-config) pair shares this one executable — the
+    zero-retrace invariant).  pos: traced int32 scalar, the absolute
+    cache entry of tokens[:, 0] (the dense pool position).  The
+    window's K/V are computed at THIS call's config and overwrite
+    whatever the draft steps left at entries pos..pos+W-1; row w of the
+    returned (B, W, V) logits scores position pos+w.  Rows past the
+    valid count depend only on pad tokens: their logits are ignored
+    and their K/V writes land past the committed length, masked by the
+    pool position and rewritten before any read."""
+    verify_gate(cfg)
+    W = tokens.shape[1]
+    positions = pos + jnp.arange(W)
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.norm == "ln":
+        x = x + jnp.take(params["dec_pos"], positions, axis=0
+                         )[None].astype(x.dtype)
+    new_cache: Params = {"pos": jnp.asarray(pos) + W}
+    npat = len(cfg.pattern)
+    n_groups, acfg_scan, acfg_rest = _layer_cfg_plan(params["blocks"],
+                                                     approx_cfg, npat)
+    if "scan" in params["blocks"]:
+        def scan_fn(x, gp_cl_ac):
+            gp, cl, ac = gp_cl_ac
+            ncl = {}
+            for j in range(npat):
+                x, c = _verify_block(
+                    gp[f"b{j}"], x, cl[f"b{j}"], cfg, positions,
+                    approx_cfg=approx_cfg if ac is None else ac[j])
+                ncl[f"b{j}"] = c
+            return x, ncl
+        if cfg.scan_layers:
+            x, new_scan = jax.lax.scan(scan_fn, x, (params["blocks"]["scan"],
+                                                    cache["scan"],
+                                                    acfg_scan))
+        else:
+            outs = []
+            for g in range(n_groups):
+                gp_cl = jax.tree.map(lambda a: a[g],
+                                     (params["blocks"]["scan"],
+                                      cache["scan"]))
+                ac = acfg_scan[g] if acfg_scan is not None else None
+                x, ncl = scan_fn(x, gp_cl + (ac,))
+                outs.append(ncl)
+            new_scan = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache["scan"] = new_scan
+    r = 0
+    while f"rest{r}" in params["blocks"]:
+        x, c = _verify_block(params["blocks"][f"rest{r}"], x,
+                             cache[f"rest{r}"], cfg, positions,
+                             approx_cfg=(approx_cfg if acfg_rest is None
+                                         else acfg_rest[r]))
+        new_cache[f"rest{r}"] = c
+        r += 1
+    x = _apply_norm(params["final_norm"], x, cfg)
+    logits = logits_for(params, cfg, x)
+    return logits, new_cache
+
+
 def prefill(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
             enc_embeds=None, max_len: int | None = None,
             approx_cfg=0, true_len=None):
@@ -1498,7 +1633,10 @@ def paged_prefill_chunk(params, cfg: ModelConfig, cache, tokens, *,
     scatter into the slot's blocks (pads go to the trash block); each
     chunk position attends to every cached key at absolute position
     <= its own, so chaining chunks reproduces full-prompt prefill.
-    Returns (logits (1,V) at the last valid position, new pool leaves).
+    Returns (logits (1,C,V) at EVERY chunk position, new pool leaves):
+    prefill callers index ``count - 1`` on the host for the next-token
+    sample; the speculative verify pass (DESIGN.md §12) consumes all
+    rows — one chunk call scores k draft positions at once.
     """
     from repro.serve.paged_cache import TRASH_BLOCK
 
@@ -1597,6 +1735,5 @@ def paged_prefill_chunk(params, cfg: ModelConfig, cache, tokens, *,
         new_cache[f"rest{r}"] = c
         r += 1
     x = _apply_norm(params["final_norm"], x, cfg)
-    last = jnp.take(x, count - 1, axis=1)
-    logits = logits_for(params, cfg, last)
+    logits = logits_for(params, cfg, x)
     return logits, new_cache

@@ -110,6 +110,22 @@ paging) pads prompts to a boundary and passes the true length as a
 traced scalar, collapsing the per-prompt-length prefill retrace to ONE
 executable.
 
+PR 9 turns the knob into a FREE draft model: ``Engine(spec=
+SpecConfig(...))`` makes eligible greedy decode ticks run k draft
+steps at an aggressive low-power config, then ONE service-config
+verify pass scores the whole window — the dense path through a static
+W = max_k + 1 ``decode_verify`` executable, the paged path through the
+PR-8 prefill-chunk executable per slot — accepting the longest
+agreeing prefix plus the verifier's correction/bonus token
+(DESIGN.md §12, serve/speculative.py).  Every emitted token is the
+verifier's own argmax, so the stream equals non-speculative greedy;
+drafts bill at the draft config (``kind="spec_draft"``), verifies as
+one service-config weight-pass per slot (``"spec_verify"``), and the
+scheduler gains draft depth as a second control axis
+(``record_spec`` / draft-k hysteresis).  k is a host loop count and
+draft_cfg traced data: live (k, draft-cfg) retargets via ``set_spec``
+compile nothing.
+
 CONFIG-KEY CONVENTION (used by ``apply_allocation``, the scheduler,
 and the controller alike): a config-tensor cell is addressed by
 ``layer`` (int index into the depth axis), then — only when the engine
@@ -136,8 +152,15 @@ from repro.dist.sharding import activate as _activate, lsc_tree
 from repro.nn import transformer as T
 from .paged_cache import ZERO_BLOCK, PagedCacheConfig, PageAllocator
 from .sampling import sample
+from .speculative import SpecConfig, longest_agreeing_prefix
 
 _ENERGY_PJ = ENERGY_PER_MAC_PJ
+
+
+class _SpecAbort(RuntimeError):
+    """Internal: roll back a speculative tick (draft-side corruption —
+    the DRAFT config misbehaving must not quarantine the pool config,
+    so it gets its own control flow, not the failure/NaN paths)."""
 
 
 def _mred_table() -> np.ndarray:
@@ -238,7 +261,8 @@ class Engine:
                  fault_injector=None, brownout=None,
                  checkpointer=None, snapshot_every: int = 0,
                  paged: PagedCacheConfig | None = None,
-                 prefill_pad: int = 0):
+                 prefill_pad: int = 0,
+                 spec: SpecConfig | None = None):
         """Continuous-batching engine over one compiled prefill + one
         compiled decode executable.
 
@@ -323,6 +347,16 @@ class Engine:
             scalar, so all prompt lengths share ONE compiled prefill
             executable (paged mode implies the chunk boundary).
             Attention-only patterns, float KV.
+
+        Speculative decoding (PR 9, DESIGN.md §12):
+
+        spec (default None = off): a ``serve.speculative.SpecConfig``
+            — eligible decode ticks run ``k`` draft steps at the
+            aggressive ``draft_cfg`` then ONE service-config verify
+            pass over all k positions, emitting the longest agreeing
+            prefix + the verifier's corrected token (stream identical
+            to non-speculative greedy by construction).  Greedy slots
+            only; needs an all-'global' float-KV model; single-host.
         """
         # quantize every dense GEMM weight ONCE at engine init and carry
         # QTensors through the jitted step functions — no decode step
@@ -452,6 +486,17 @@ class Engine:
         self.mac_energy_pj_per_param = 0.0   # sum over tokens of E(cfg)
         self.exact_energy_pj_per_param = 0.0
         self.n_tokens_charged = 0
+        # serve-only twins of the integrals above: every charge EXCEPT
+        # kind="probe" (shadow probes are measurement overhead, not
+        # service traffic — the scheduler's measured-pJ/token feedback
+        # and the serving benches read these; the totals above keep
+        # summing every executed row, probes included)
+        self.serve_mac_energy_pj_per_param = 0.0
+        self.n_serve_tokens_charged = 0
+        # emitted-token counter (every token appended to a request):
+        # the speculative bench's pJ/token denominator — under
+        # speculation one verify step emits up to k+1 of these
+        self.n_tokens_emitted = 0
         # every energy charge, in order: (kind, tokens, per-MAC pJ at
         # the executed config) — the report totals are exactly the sum
         # of these rows while nothing has been evicted
@@ -545,6 +590,33 @@ class Engine:
                         params, cfg_, tokens, max_len=max_len,
                         approx_cfg=acfg))
 
+        # -- speculative decoding (PR 9, DESIGN.md §12) ----------------
+        self.spec = spec
+        self.n_spec_ticks = 0        # speculative ticks committed
+        self.n_spec_aborts = 0       # spec ticks rolled back (NaN/fault)
+        self.n_draft_tokens = 0      # draft-config tokens executed
+        self.n_spec_emitted = 0      # tokens emitted by verify passes
+        self.n_verify_steps = 0      # verify passes committed
+        if spec is not None:
+            assert mapping is None, \
+                "speculative decoding is single-host in v1"
+            T.verify_gate(cfg)
+            W = spec.max_k + 1
+            if paged is not None:
+                # the verify window rides the prefill-chunk executable,
+                # so it must fit one chunk
+                assert W <= paged.prefill_chunk, (W, paged.prefill_chunk)
+            else:
+                assert W < max_len, (W, max_len)
+                # ONE verify executable, ever: W is the only static
+                # shape speculation adds — k and draft_cfg are host
+                # loop count / traced data (zero retraces across the
+                # whole (k, draft-cfg) sweep)
+                self._verify = jax.jit(
+                    lambda params, cache, tokens, pos, acfg:
+                    T.decode_verify(params, cfg_, cache, tokens, pos,
+                                    approx_cfg=acfg))
+
         # online power-budget scheduler (serve/scheduler.py): hooks into
         # every tick AFTER the jitted functions exist — its shadow
         # probes reuse self._decode, so the whole loop adds zero
@@ -552,6 +624,10 @@ class Engine:
         self.scheduler = scheduler
         if scheduler is not None:
             scheduler.attach(self)
+            if spec is not None and hasattr(scheduler, "configure_spec"):
+                # the draft depth k becomes the scheduler's second
+                # control axis (one-notch hysteresis, like the ladder)
+                scheduler.configure_spec(spec.k)
 
     # -- sharded-serving helpers -----------------------------------------
     def _ctx(self):
@@ -792,6 +868,14 @@ class Engine:
         self.mac_energy_pj_per_param += tokens * pj
         self.exact_energy_pj_per_param += tokens * float(_ENERGY_PJ[0])
         self.n_tokens_charged += tokens
+        if kind != "probe":
+            # shadow probes (scheduler.on_step) are billed — they are
+            # real executed decodes, and energy_log rows must keep
+            # summing to the report totals — but stay OUT of the
+            # serve-only counters: measurement overhead must not read
+            # as service traffic in the budget-feedback integral
+            self.serve_mac_energy_pj_per_param += tokens * pj
+            self.n_serve_tokens_charged += tokens
         self.energy_log.append((kind, tokens, pj))
 
     def _admission_power_ok(self, req_cfg: np.ndarray,
@@ -863,6 +947,7 @@ class Engine:
                 self.rng, k = jax.random.split(self.rng)
                 first = sample(logits, k, temperature=req.temperature)
                 req.tokens.append(int(first[0]))
+                self.n_tokens_emitted += 1
                 req.first_token_at = self.clock()
                 self.slots[slot] = req
 
@@ -982,7 +1067,17 @@ class Engine:
             if resumed:
                 toks = np.concatenate(
                     [toks, np.asarray(req.tokens[:-1], np.int32)])
-            if toks.size >= self.max_len:
+            # a request whose PEAK committed length can never fit the
+            # block pool must be rejected up front (satellite fix): it
+            # used to be admitted, starve, preempt every other stream
+            # and re-queue itself at the front — an eternal livelock.
+            # Peak entries: generation stops at min(prompt + max_new
+            # - 1, max_len - 1) committed cache entries (the first
+            # token is sampled off the prefill, costing no entry).
+            peak = min(len(np.asarray(req.prompt).reshape(-1))
+                       + req.max_new_tokens - 1, self.max_len - 1)
+            if (toks.size >= self.max_len
+                    or p.blocks_for(peak) > p.usable_blocks):
                 self.queue.popleft()
                 req.status = "rejected"
                 req.finished_at = self.clock()
@@ -1032,6 +1127,8 @@ class Engine:
         p = self.paged
         bs, C = p.block_size, p.prefill_chunk
         for slot in sorted(self._prefill_progress):
+            if slot not in self._prefill_progress:
+                continue       # preempted by an earlier slot this tick
             prog = self._prefill_progress[slot]
             toks, start = prog["tokens"], prog["next"]
             count = int(min(C, toks.size - start))
@@ -1039,8 +1136,23 @@ class Engine:
             have = len(self._slot_blocks[slot])
             need = p.blocks_for(end) - have
             if need > 0:
+                # starved-pool escape (satellite fix): the decode path
+                # preempts the youngest request when it cannot get a
+                # write block (_ensure_write_blocks), but this path
+                # used to just wait — two mid-prefill slots that
+                # exhaust the pool then DEADLOCK forever, each holding
+                # blocks the other needs while no decode tick ever
+                # runs.  Preempt-by-recompute breaks the cycle; a slot
+                # never preempts itself (if it is the youngest, an
+                # older stuck slot's escape will preempt it instead)
+                while not self.allocator.can_alloc(need):
+                    victim = self._preemption_victim()
+                    if victim is None or victim == slot:
+                        break
+                    self._preempt(victim)
                 if not self.allocator.can_alloc(need):
                     continue               # pool short; retry next tick
+                have = len(self._slot_blocks[slot])
                 new = self.allocator.alloc_n(need)
                 self._slot_blocks[slot].extend(new)
                 self.block_tables[slot, have:have + need] = new
@@ -1063,6 +1175,10 @@ class Engine:
                     jnp.asarray(start, jnp.int32),
                     jnp.asarray(count, jnp.int32), acfg)
                 self.cache = new_leaves
+                # the chunk executable returns EVERY position's logits
+                # (the speculative verify consumes all rows); prefill
+                # completion samples from the last true one
+                logits = logits[:, count - 1]
             self.n_prefill_tokens += count       # TRUE tokens advanced
             self._count_energy(C, cfg_vec, "prefill")  # executed width
             self.seq_lens[slot] = end
@@ -1076,6 +1192,7 @@ class Engine:
                     first = sample(logits, k,
                                    temperature=req.temperature)
                     req.tokens.append(int(first[0]))
+                    self.n_tokens_emitted += 1
                 if req.first_token_at is None:
                     req.first_token_at = self.clock()
 
@@ -1117,6 +1234,327 @@ class Engine:
             rows.append(i)
         return rows
 
+    # -- speculative decoding (PR 9, DESIGN.md §12) ----------------------
+    def _spec_k(self) -> int:
+        """Live draft depth: the scheduler's draft-k control axis when
+        one is attached (one-notch hysteresis backoff + recovery),
+        else the configured k — always capped by the static window
+        bound max_k (k itself is a host loop count, never a shape)."""
+        k = self.spec.k
+        if self.scheduler is not None:
+            k = getattr(self.scheduler, "draft_k", None) or k
+        return max(1, min(int(k), self.spec.max_k))
+
+    def set_spec(self, spec: SpecConfig) -> None:
+        """Live retarget of the draft axis — no recompilation: the
+        draft config is traced DATA and k is a host loop count.  Only
+        ``max_k`` is pinned (the verify window W = max_k + 1 is the
+        one compiled shape speculation adds)."""
+        assert self.spec is not None, "Engine(spec=...) required"
+        assert spec.max_k == self.spec.max_k, (spec.max_k,
+                                               self.spec.max_k)
+        self.spec = spec
+        if (self.scheduler is not None
+                and hasattr(self.scheduler, "configure_spec")):
+            self.scheduler.configure_spec(spec.k)
+
+    def _trim_slot_blocks(self, slot: int, keep: int) -> None:
+        """Release a paged slot's owned blocks past index ``keep`` —
+        the speculative rewind: blocks allocated for rejected draft
+        entries go back to the pool, their table columns re-zero so
+        gathers past the committed length read zeros again.  Only
+        blocks this spec tick allocated are ever trimmed (callers pass
+        keep >= the pre-tick count), so shared/COW prefix blocks are
+        untouchable here."""
+        surplus = self._slot_blocks[slot][keep:]
+        if not surplus:
+            return
+        self.allocator.release(surplus)
+        del self._slot_blocks[slot][keep:]
+        self.block_tables[slot, keep:] = ZERO_BLOCK
+
+    def _rewind_slot(self, slot: int, new_len: int, keep: int) -> None:
+        """Roll a paged slot's committed length back to ``new_len``
+        (speculative abort/rejection): seq_lens rewinds and the spec-
+        allocated surplus blocks are released.  Stale K/V past new_len
+        needs no scrub — entries are masked by seq_lens and rewritten
+        before any read, the same write-before-read invariant normal
+        decode relies on."""
+        self.seq_lens[slot] = new_len
+        self._trim_slot_blocks(slot, keep)
+
+    def _spec_ok_dense(self, active: list[int]) -> bool:
+        """Dense spec-tick eligibility: every participant greedy (the
+        acceptance rule only exists under argmax) and the whole static
+        window inside the cache (the lockstep pool writes the window
+        at the shared pool position)."""
+        if any(self.slots[i].temperature > 0.0 for i in active):
+            return False
+        P = int(self.slot_pos[active].max())
+        return P + self.spec.max_k + 1 <= self.max_len
+
+    def _spec_ok_paged(self, active: list[int]) -> bool:
+        """Paged eligibility: greedy participants, window headroom per
+        slot, and the WHOLE window's blocks allocatable up front — the
+        draft loop must never preempt a fellow participant mid-tick."""
+        if any(self.slots[i].temperature > 0.0 for i in active):
+            return False
+        k = self._spec_k()
+        p = self.paged
+        need = 0
+        for i in active:
+            P = int(self.seq_lens[i])
+            if P + k + 1 > self.max_len:
+                return False
+            need += max(0, p.blocks_for(P + k + 1)
+                        - len(self._slot_blocks[i]))
+        return self.allocator.can_alloc(need)
+
+    def _spec_tick_dense(self, active: list[int], now: float, inj):
+        """Speculative dense tick: k draft steps at the draft config
+        (functional cache updates — draft K/V lives only in discarded
+        intermediate leaves, so the rollback is free), then ONE
+        ``decode_verify`` pass at the pool config from the PRE-draft
+        cache.  The dense cache position is lockstep, so the pool
+        advances the MINIMUM acceptance over participants; each slot
+        still emits its OWN verifier argmaxes (valid: a_pool never
+        exceeds any slot's own agreeing prefix + 1)."""
+        spec = self.spec
+        k = self._spec_k()
+        W = spec.max_k + 1
+        P = int(self.slot_pos[active].max())
+        draft_vec = self._as_layer_vector(spec.draft_cfg)
+        pool_cfg = self._pool_cfg()
+        tokens = np.zeros((self.max_batch, W), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].tokens[-1]
+        cache = dict(self.cache)
+        cache["pos"] = self._replicate(jnp.asarray(P, jnp.int32))
+        draft_acfg = self._replicate(draft_vec)
+        try:
+            for j in range(1, k + 1):
+                dlogits, cache = self._decode(
+                    self.params, cache,
+                    self._replicate(jnp.asarray(tokens[:, j - 1:j])),
+                    draft_acfg)
+                if not np.isfinite(np.asarray(dlogits)[active]).all():
+                    raise _SpecAbort("non-finite draft logits")
+                self._count_energy(len(active), draft_vec, "spec_draft")
+                self.n_draft_tokens += len(active)
+                tokens[:, j] = np.asarray(
+                    jnp.argmax(dlogits, axis=-1).astype(jnp.int32))
+            # ONE verify pass at the pool config from the PRE-draft
+            # cache: its K/V writes at entries P..P+W-1 are the only
+            # ones that commit, so the cache is service-config state
+            # end to end
+            if inj is not None:
+                inj.check_step_fail()
+            vlogits, new_cache = self._verify(
+                self.params, dict(self.cache),
+                self._replicate(jnp.asarray(tokens)),
+                jnp.asarray(P, jnp.int32), self._replicate(pool_cfg))
+            if inj is not None:
+                vlogits = inj.corrupt_logits(vlogits, active)
+        except _SpecAbort:
+            # the DRAFT config corrupted: nothing committed, nothing to
+            # quarantine (the pool config is innocent) — skip the tick
+            self.n_spec_aborts += 1
+            return True
+        except Exception as err:  # noqa: BLE001 — same retry contract
+            self.n_spec_aborts += 1          # as the normal decode path
+            self._record_failure(active, now, err)
+            return True
+        rows = np.asarray(vlogits)
+        bad = [i for i in active
+               if not np.isfinite(rows[i, :k + 1]).all()]
+        if bad:
+            # the POOL config corrupted the verify: the standard
+            # quarantine response (cache uncommitted — rollback free)
+            self.n_spec_aborts += 1
+            self._quarantine(bad, pool_cfg)
+            return True
+        self.cache = new_cache
+        self._retry_streak = 0
+        self.n_spec_ticks += 1
+        self.n_verify_steps += len(active)
+        # the verify chunk is ONE weight-pass over the params per slot:
+        # one service-config token-charge each (weight-bound energy
+        # model, DESIGN.md §12) vs k draft-config charges above
+        self._count_energy(len(active), pool_cfg, "spec_verify")
+        exact = np.asarray(jnp.argmax(vlogits, axis=-1).astype(jnp.int32))
+        a_pool = k + 1
+        accepted: dict[int, int] = {}
+        for i in active:
+            js = longest_agreeing_prefix(tokens[i, 1:k + 1],
+                                         exact[i, :k])
+            accepted[i] = js
+            a_pool = min(a_pool, js + 1)
+        if (self.scheduler is not None
+                and hasattr(self.scheduler, "record_spec")):
+            for i in active:
+                self.scheduler.record_spec(accepted[i], k, draft_vec)
+        for i in active:
+            req = self.slots[i]
+            done = False
+            for j in range(a_pool):
+                req.tokens.append(int(exact[i, j]))
+                self.n_spec_emitted += 1
+                self.n_tokens_emitted += 1
+                if (len(req.tokens) >= req.max_new_tokens
+                        or self.slot_pos[i] + j + 1 >= self.max_len - 1):
+                    done = True
+                    break
+            self.slot_pos[i] += a_pool
+            if done:
+                req.done = True
+                req.status = "done"
+                req.finished_at = self.clock()
+                # repro-lint: disable=bounded-state — completed holds the run()'s return payload, one entry per submitted request; bounding it would silently drop finished results
+                self.completed.append(req)
+                self.slots[i] = None
+                self._nan_strikes[i] = 0
+        if (self.snapshot_every and self.checkpointer is not None
+                and (self.n_decode_steps + self.n_spec_ticks)
+                % self.snapshot_every == 0):
+            self.save_snapshot()
+        if self.scheduler is not None:
+            self.scheduler.on_tick(self)
+        return True
+
+    def _spec_tick_paged(self, active: list[int], now: float, inj):
+        """Speculative paged tick: k committed draft steps (entries
+        P..P+k-1 at the draft config — every one overwritten by the
+        verify chunk, so stale draft state is never read), then per
+        slot ONE chunked verify pass at the pool config through the
+        SAME prefill-chunk executable, per-slot acceptance, and a
+        seq_lens/block-table rewind past the acceptance point."""
+        p = self.paged
+        spec = self.spec
+        k = self._spec_k()
+        P0 = {i: int(self.seq_lens[i]) for i in active}
+        pre_blocks = {i: len(self._slot_blocks[i]) for i in active}
+        draft_vec = self._as_layer_vector(spec.draft_cfg)
+        pool_cfg = self._pool_cfg()
+        active_mask = np.zeros(self.max_batch, dtype=bool)
+        active_mask[active] = True
+        tokens = np.zeros((self.max_batch, k + 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].tokens[-1]
+        draft_acfg = self._replicate(draft_vec)
+
+        def rollback(slots_):
+            for s in slots_:
+                self._rewind_slot(s, P0[s], pre_blocks[s])
+
+        try:
+            for j in range(1, k + 1):
+                # writable page for entry seq_lens: the eligibility
+                # gate pre-checked can_alloc for the whole window, so
+                # this never preempts a participant
+                self._ensure_write_blocks(active)
+                dlogits, new_leaves = self._decode(
+                    self.params, self._paged_operands(active_mask),
+                    self._replicate(jnp.asarray(tokens[:, j - 1:j])),
+                    draft_acfg)
+                if not np.isfinite(np.asarray(dlogits)[active]).all():
+                    raise _SpecAbort("non-finite draft logits")
+                self.cache = new_leaves
+                self._count_energy(len(active), draft_vec, "spec_draft")
+                self.n_draft_tokens += len(active)
+                tokens[:, j] = np.asarray(
+                    jnp.argmax(dlogits, axis=-1).astype(jnp.int32))
+                for i in active:
+                    self.seq_lens[i] += 1
+        except _SpecAbort:
+            rollback(active)
+            self.n_spec_aborts += 1
+            return True
+        except Exception as err:  # noqa: BLE001
+            rollback(active)
+            self.n_spec_aborts += 1
+            self._record_failure(active, now, err)
+            return True
+        # one more writable page for the verify window's last entry P+k
+        self._ensure_write_blocks(active)
+        C = p.prefill_chunk
+        committed = 0
+        pending = list(active)
+        while pending:
+            i = pending[0]
+            try:
+                if inj is not None:
+                    inj.check_step_fail()
+                buf = np.zeros((1, C), np.int32)
+                buf[0, :k + 1] = tokens[i, :k + 1]
+                vlogits, new_leaves = self._prefill_chunk(
+                    self.params, self._paged_operands(),
+                    self._replicate(jnp.asarray(buf)),
+                    jnp.asarray(i, jnp.int32),
+                    jnp.asarray(P0[i], jnp.int32),
+                    jnp.asarray(k + 1, jnp.int32),
+                    self._replicate(pool_cfg))
+            except Exception as err:  # noqa: BLE001
+                rollback(pending)
+                self.n_spec_aborts += 1
+                self._record_failure(pending, now, err)
+                break
+            rows = np.asarray(vlogits)
+            if not np.isfinite(rows[0, :k + 1]).all():
+                rollback(pending)
+                self.n_spec_aborts += 1
+                self._quarantine([i], pool_cfg)
+                break
+            pending.pop(0)
+            self.cache = new_leaves
+            self._count_energy(1, pool_cfg, "spec_verify")
+            self.n_verify_steps += 1
+            committed += 1
+            exact = np.asarray(jnp.argmax(
+                vlogits[0, :k + 1], axis=-1).astype(jnp.int32))
+            js = longest_agreeing_prefix(tokens[i, 1:k + 1], exact[:k])
+            a = js + 1
+            if (self.scheduler is not None
+                    and hasattr(self.scheduler, "record_spec")):
+                self.scheduler.record_spec(js, k, draft_vec)
+            req = self.slots[i]
+            done = False
+            for j in range(a):
+                req.tokens.append(int(exact[j]))
+                self.n_spec_emitted += 1
+                self.n_tokens_emitted += 1
+                if (len(req.tokens) >= req.max_new_tokens
+                        or self.slot_pos[i] + j + 1 >= self.max_len - 1):
+                    done = True
+                    break
+            self.seq_lens[i] = P0[i] + a
+            self.slot_pos[i] += a
+            if done:
+                req.done = True
+                req.status = "done"
+                req.finished_at = self.clock()
+                # repro-lint: disable=bounded-state — completed holds the run()'s return payload, one entry per submitted request; bounding it would silently drop finished results
+                self.completed.append(req)
+                self.slots[i] = None
+                self._nan_strikes[i] = 0
+                self._release_slot(i)
+                self.slot_pos[i] = 0
+            else:
+                # rejected draft entries' surplus blocks go back; only
+                # blocks THIS tick allocated are candidates
+                self._trim_slot_blocks(
+                    i, max(p.blocks_for(P0[i] + a), pre_blocks[i]))
+        if not committed:
+            return True
+        self._retry_streak = 0
+        self.n_spec_ticks += 1
+        if (self.snapshot_every and self.checkpointer is not None
+                and (self.n_decode_steps + self.n_spec_ticks)
+                % self.snapshot_every == 0):
+            self.save_snapshot()
+        if self.scheduler is not None:
+            self.scheduler.on_tick(self)
+        return True
+
     def _step_paged(self):
         """One paged tick: the dense tick's preamble, then chunked
         prefill for mid-prompt slots and ONE batched decode step for the
@@ -1140,6 +1578,8 @@ class Engine:
         if not active:
             return bool(self.queue
                         or any(s is not None for s in self.slots))
+        if self.spec is not None and self._spec_ok_paged(active):
+            return self._spec_tick_paged(active, now, inj)
         token = np.zeros((self.max_batch, 1), dtype=np.int32)
         active_mask = np.zeros(self.max_batch, dtype=bool)
         for i in active:
@@ -1173,12 +1613,15 @@ class Engine:
         self._count_energy(len(active), pool_cfg)
         feedback = 1 if inj is None else inj.probe_multiplicity()
         if self.scheduler is not None:
-            for _ in range(feedback):
-                # `cache` still holds the PRE-step operands (tables,
-                # lens, old pool), so shadow probes re-run this exact
-                # step through the same executable
-                self.scheduler.on_step(self, active, cache, token,
-                                       logits, pool_cfg)
+            # `cache` still holds the PRE-step operands (tables, lens,
+            # old pool), so the shadow probe re-runs this exact step
+            # through the same executable.  dup_probe chaos duplicates
+            # the TELEMETRY delivery, never the probe decode: the
+            # multiplicity rides into on_step, which runs the compute
+            # once and records the outcome `feedback` times
+            self.scheduler.on_step(self, active, cache, token,
+                                   logits, pool_cfg,
+                                   multiplicity=feedback)
         self.rng, k = jax.random.split(self.rng)
         temps = np.asarray([r.temperature if r is not None else 0.0
                             for r in self.slots], np.float32)
@@ -1194,6 +1637,7 @@ class Engine:
             req = self.slots[i]
             self.seq_lens[i] += 1
             req.tokens.append(int(nxt[i]))
+            self.n_tokens_emitted += 1
             self.slot_pos[i] += 1
             if (len(req.tokens) >= req.max_new_tokens
                     or self.slot_pos[i] >= self.max_len - 1):
@@ -1242,6 +1686,8 @@ class Engine:
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return False
+        if self.spec is not None and self._spec_ok_dense(active):
+            return self._spec_tick_dense(active, now, inj)
         token = np.zeros((self.max_batch, 1), dtype=np.int32)
         for i in active:
             token[i, 0] = self.slots[i].tokens[-1]
@@ -1285,13 +1731,16 @@ class Engine:
         # at-least-once telemetry
         feedback = 1 if inj is None else inj.probe_multiplicity()
         if self.scheduler is not None:
-            for _ in range(feedback):
-                # shadow probe: `cache` still holds the PRE-step state,
-                # so the scheduler can re-run this exact step at the
-                # exact config through the same executable and score
-                # agreement
-                self.scheduler.on_step(self, active, cache, token,
-                                       logits, pool_cfg)
+            # shadow probe: `cache` still holds the PRE-step state, so
+            # the scheduler can re-run this exact step at the exact
+            # config through the same executable and score agreement.
+            # dup_probe chaos duplicates the TELEMETRY delivery, never
+            # the probe decode: the multiplicity rides into on_step,
+            # which runs the compute once and records it `feedback`
+            # times
+            self.scheduler.on_step(self, active, cache, token,
+                                   logits, pool_cfg,
+                                   multiplicity=feedback)
         self.rng, k = jax.random.split(self.rng)
         # per-slot temperatures (sampling.sample takes one scalar): rows
         # at temperature t sample categorically from logits/t, rows at
@@ -1312,6 +1761,7 @@ class Engine:
         for i in active:
             req = self.slots[i]
             req.tokens.append(int(nxt[i]))
+            self.n_tokens_emitted += 1
             self.slot_pos[i] += 1
             if (len(req.tokens) >= req.max_new_tokens
                     or self.slot_pos[i] >= self.max_len - 1):
@@ -1448,6 +1898,10 @@ class Engine:
     _SNAP_COUNTERS = ("n_decode_steps", "n_prefill_tokens",
                       "mac_energy_pj_per_param",
                       "exact_energy_pj_per_param", "n_tokens_charged",
+                      "serve_mac_energy_pj_per_param",
+                      "n_serve_tokens_charged", "n_tokens_emitted",
+                      "n_spec_ticks", "n_spec_aborts", "n_draft_tokens",
+                      "n_spec_emitted", "n_verify_steps",
                       "n_rejected", "n_expired", "n_failed", "n_retries",
                       "n_nan_events", "n_quarantined")
     # fault counters never roll back: an in-process restore (self-heal)

@@ -37,9 +37,23 @@ probe signal — this is also what un-bans a backed-off config once its
 hold expires; injected ``sensitivity`` tables relax the same way, pass
 ``recover=0`` to pin them).
 
-Shadow probes are measurement, not service traffic: their energy is not
-charged to the budget integral (the modeled overhead is one extra
-decode step per ``probe_every`` ticks).
+Shadow probes are measurement, not service traffic — but they ARE real
+executed decodes, so they are billed: each probe adds a ``kind="probe"``
+row to ``engine.energy_log`` (whose rows sum to the report totals),
+while staying OUT of the serve-only counters the budget integral reads
+(``engine.serve_mac_energy_pj_per_param`` /
+``engine.n_serve_tokens_charged``).  Measurement overhead is accounted
+for without ever reading as service traffic (the modeled overhead is one
+extra decode step per ``probe_every`` ticks).
+
+Speculative decoding (PR 9, DESIGN.md §12) gives the scheduler a second
+control axis: ``Engine(spec=...)`` calls ``configure_spec`` and feeds
+per-slot draft acceptance through ``record_spec``, which attributes
+agreement to the executed DRAFT config via the same ``record_probe``/
+EWMA plumbing (``ladder=False`` — expected draft disagreement must never
+back the POOL assignment off) and runs the draft depth ``k`` through the
+same one-notch hysteresis: zero-acceptance bursts step ``draft_k`` down
+(floor 1), hold, then recover one notch per retune.
 
 Usage::
 
@@ -211,6 +225,12 @@ class PowerBudgetScheduler:
         self._win_agree = 0
         self._streak = 0
         self.n_backoffs = 0
+        # speculative draft-depth axis (PR 9): configured by
+        # Engine(spec=...) via configure_spec; None = speculation off
+        self.draft_k: int | None = None
+        self._k0: int | None = None
+        self._k_streak = 0
+        self._k_hold_until = 0
         self._mark = (0.0, 0)          # (pj_per_param, tokens) at last retune
         # bounded audit window (one entry per retune/backoff): the
         # counters above carry the lifetime stats
@@ -236,8 +256,20 @@ class PowerBudgetScheduler:
         self.engine = engine
         self.bind(engine.approx_cfg.shape, engine.macs_per_token,
                   engine._moe_mac_frac, initial=engine.approx_cfg)
-        self._mark = (engine.mac_energy_pj_per_param,
-                      engine.n_tokens_charged)
+        self._mark = self._serve_counters(engine)
+
+    @staticmethod
+    def _serve_counters(engine) -> tuple[float, int]:
+        """The SERVE-traffic energy integral (excludes kind="probe"
+        rows) — the measured-pJ/token window must not count the
+        scheduler's own probe decodes as service output.  getattr
+        fallback: the scheduler also runs against engine stubs that
+        predate the serve-only counters."""
+        e = getattr(engine, "serve_mac_energy_pj_per_param",
+                    engine.mac_energy_pj_per_param)
+        n = getattr(engine, "n_serve_tokens_charged",
+                    engine.n_tokens_charged)
+        return float(e), int(n)
 
     # -- degradation model ----------------------------------------------
     def _prior(self, config: int) -> float:
@@ -337,13 +369,23 @@ class PowerBudgetScheduler:
 
     # -- engine hooks ----------------------------------------------------
     def on_step(self, engine, active, cache, token, logits,
-                pool_cfg) -> None:
+                pool_cfg, multiplicity: int = 1) -> None:
         """Decode-step hook: every ``probe_every``-th step, shadow-decode
         the SAME pre-step state at the exact config (same compiled
         executable — the config is a traced argument) and score greedy-
         token agreement on one sampled active slot.  An all-exact pool
         has nothing to measure (the probe would compare exact against
-        exact), so it costs nothing."""
+        exact), so it costs nothing.
+
+        ``multiplicity`` is the chaos-faulted telemetry delivery count
+        (faults.probe_multiplicity: 0 = dropped, 2 = duplicated).
+        At-least-once delivery duplicates the RECORDED outcome, never
+        the probe compute: the exact-config decode runs exactly once
+        per probed step, whatever the delivery count (satellite fix —
+        the engine used to loop this whole hook, re-executing the
+        shadow decode per duplicate)."""
+        if multiplicity <= 0:
+            return
         if engine.n_decode_steps % self.probe_every:
             return
         if not np.any(pool_cfg):
@@ -354,12 +396,17 @@ class PowerBudgetScheduler:
         probe_logits, _ = engine._decode(engine.params, cache,
                                          jnp.asarray(token),
                                          engine._replicate(exact))
+        # the probe is a real executed exact-config decode: bill it
+        # (kind="probe" — in energy_log totals, out of serve counters)
+        engine._count_energy(len(active), exact, "probe")
         slot = int(self._rng.choice(active))
         got = int(np.argmax(np.asarray(logits)[slot]))
         want = int(np.argmax(np.asarray(probe_logits)[slot]))
-        self.record_probe(got == want, pool_cfg)
+        for _ in range(int(multiplicity)):
+            self.record_probe(got == want, pool_cfg)
 
-    def record_probe(self, agree: bool, executed_cfg=None) -> None:
+    def record_probe(self, agree: bool, executed_cfg=None, *,
+                     ladder: bool = True) -> None:
         """Fold one probe outcome into the feedback state (public so
         tests — or an external quality signal — can inject outcomes):
         EWMA-update the degradation estimates of the configs that
@@ -373,7 +420,13 @@ class PowerBudgetScheduler:
         (key, config) cells only: an agreement measured at a
         pinned-down config says nothing about the assignment's (more
         aggressive) configs, so those estimates are left alone.
-        Defaults to the current assignment (the no-pins case)."""
+        Defaults to the current assignment (the no-pins case).
+
+        ``ladder=False`` updates the estimates WITHOUT feeding the
+        pool's backoff hysteresis — speculative draft feedback
+        (``record_spec``) measures the DRAFT config, and its expected
+        disagreement must never step the pool assignment down (the
+        draft depth has its own hysteresis axis)."""
         self.n_probes += 1
         self._win_probes += 1
         r = 0.0 if agree else 1.0
@@ -398,10 +451,48 @@ class PowerBudgetScheduler:
                 # of the MRED prior
                 self.est[(k, cfg_k)] = max(
                     new, self.prior_floor * self._prior(cfg_k))
+        if not ladder:
+            return
         self._streak = 0 if agree else self._streak + 1
         if self._streak >= self.hysteresis:
             self._backoff(ran)
             self._streak = 0
+
+    # -- speculative draft-depth axis (PR 9) -----------------------------
+    def configure_spec(self, k: int) -> None:
+        """Arm the draft-depth control axis at depth ``k`` (called by
+        ``Engine.__init__``/``set_spec`` when speculation is on)."""
+        self._k0 = int(k)
+        self.draft_k = int(k)
+        self._k_streak = 0
+
+    def record_spec(self, accepted: int, k: int, draft_cfg) -> None:
+        """Fold one slot's speculative acceptance into the feedback
+        state: ``accepted`` of the ``k`` drafts agreed with the
+        verifier.  Each agreement/disagreement lands on the executed
+        DRAFT config's (key, cfg) cells through the same
+        ``record_probe``/EWMA plumbing as the shadow probes — with
+        ``ladder=False``, so expected draft disagreement never backs
+        the POOL assignment off.  The draft depth is its own one-notch
+        hysteresis axis: ``hysteresis`` consecutive zero-acceptance
+        ticks step ``draft_k`` down one (floor 1) and hold it for
+        ``hold_ticks``; ``on_tick`` recovers one notch per retune once
+        the hold expires."""
+        ran = np.asarray(draft_cfg)
+        for _ in range(int(accepted)):
+            self.record_probe(True, ran, ladder=False)
+        if accepted < k:
+            self.record_probe(False, ran, ladder=False)
+        if self.draft_k is None:
+            return
+        self._k_streak = self._k_streak + 1 if accepted == 0 else 0
+        if self._k_streak >= self.hysteresis and self.draft_k > 1:
+            self.draft_k -= 1
+            self._k_streak = 0
+            self._k_hold_until = self.tick + self.hold_ticks
+            self.history.append({"event": "spec_backoff",
+                                 "tick": self.tick,
+                                 "draft_k": int(self.draft_k)})
 
     def _backoff(self, ran: np.ndarray) -> None:
         """Step the offending key down exactly ONE probe config and hold
@@ -452,11 +543,18 @@ class PowerBudgetScheduler:
             if kk not in cur:
                 prior = self._prior(kk[1])
                 self.est[kk] += self.recover * (prior - self.est[kk])
-        e1, n1 = engine.mac_energy_pj_per_param, engine.n_tokens_charged
+        e1, n1 = self._serve_counters(engine)
         e0, n0 = self._mark
         measured = ((e1 - e0) / (n1 - n0) * self.macs_per_token
                     if n1 > n0 else None)
         self._mark = (e1, n1)
+        # draft-depth recovery: one notch back toward the configured k
+        # per retune once a spec backoff's hold has expired (the mirror
+        # of the config ladder's hold-expiry un-ban)
+        if (self.draft_k is not None and self._k0 is not None
+                and self.draft_k < self._k0
+                and self.tick >= self._k_hold_until):
+            self.draft_k += 1
         assignment = self.plan()
         if assignment != self.assignment:
             self.assignment = assignment
@@ -476,6 +574,7 @@ class PowerBudgetScheduler:
             "modeled_pj_per_token": self._energy_pj(assignment),
             "measured_pj_per_token": measured,
             "window_agreement": agree,
+            "draft_k": self.draft_k,
             "assignment": self._tensor(assignment).tolist()})
 
     def quarantine(self, executed_cfg) -> None:
@@ -519,4 +618,5 @@ class PowerBudgetScheduler:
             "backoffs": self.n_backoffs,
             "retunes": len(retunes),
             "ticks": self.tick,
+            "draft_k": self.draft_k,
         }

@@ -1,0 +1,86 @@
+"""Approx-draft self-speculative decoding (DESIGN.md §12).
+
+The paper's knob gives speculation its draft model FOR FREE: the same
+compiled decode executable already runs at ANY of the 32 error configs
+with zero retraces (PR 1/PR 4), so an aggressive low-power config IS a
+cheap draft model and the service config is its verifier — no second
+network, no extra weights, no extra executables for the draft side.
+
+Protocol (per eligible decode tick, per participating slot):
+
+  1. run ``k`` draft steps at ``draft_cfg`` from the pending input
+     token — k greedy draft tokens d_1..d_k, K/V written at the draft
+     config (disposable state);
+  2. ONE verify pass at the service config scores the window
+     ``[t0, d_1..d_k]`` — a chunked-prefill-shaped call (the paged
+     path literally reuses the prefill-chunk executable; the dense
+     path runs ``transformer.decode_verify`` over a static window
+     W = max_k + 1) whose row i logits give the verifier's own next
+     token e_{i+1} at position P+i.  The verify OVERWRITES every entry
+     the drafts touched, so the committed cache is service-config
+     state end to end;
+  3. accept the longest agreeing prefix (j* = #leading i with
+     d_i == e_i) and emit a = j* + 1 tokens e_1..e_a — the verifier's
+     one corrected token on a mismatch, a BONUS token when every draft
+     agreed.  Every emitted token is the verifier's own argmax, so the
+     stream is identical to non-speculative greedy decoding at the
+     service config by construction;
+  4. rewind the cache past the acceptance point: dense needs no undo
+     at all (the pool position is host state recomputed each tick and
+     stale entries are rewritten before any read); paged rewinds
+     ``seq_lens`` and releases the surplus spec-allocated blocks
+     (serve/engine.py ``_rewind_slot``).
+
+Acceptance statistics flow into the scheduler through the existing
+``record_probe``/EWMA plumbing attributed to the DRAFT config
+(``PowerBudgetScheduler.record_spec``), and the draft depth ``k``
+becomes a second control axis with the same one-notch hysteresis as
+the config ladder.  Energy accounting bills draft steps at the draft
+config and the verify pass as one service-config weight-pass per slot
+(``kind="spec_draft"`` / ``"spec_verify"`` rows).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.approx_multiplier import N_CONFIGS
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs (``Engine(spec=SpecConfig(...))``).
+
+    draft_cfg: the aggressive low-power error config drafts run at —
+        an int (broadcast per layer) or anything
+        ``Engine._as_layer_vector`` accepts.  Traced DATA at run time,
+        never a shape: sweeping it recompiles nothing.
+    k: draft depth — tokens drafted per speculative tick.  A host loop
+        count (the scheduler may lower it live, ``Engine.set_spec``
+        may retarget it), bounded by ``max_k``.
+    max_k: static ceiling on k.  The dense verify window W = max_k + 1
+        is the ONE static shape speculation adds; k itself never
+        becomes a shape (repro-lint cfg-shape enforces this).
+    """
+
+    draft_cfg: int = 8
+    k: int = 3
+    max_k: int = 7
+
+    def __post_init__(self):
+        assert 1 <= self.k <= self.max_k, (self.k, self.max_k)
+        if isinstance(self.draft_cfg, int):
+            assert 0 < self.draft_cfg < N_CONFIGS, self.draft_cfg
+
+
+def longest_agreeing_prefix(draft, exact) -> int:
+    """j* — number of leading positions where the draft tokens equal
+    the verifier's own argmax tokens.  ``draft``: the k drafted tokens
+    d_1..d_k; ``exact``: the verifier's e_1..e_k (row i-1 of the
+    verify logits).  The caller emits e_1..e_{j*+1}: j* verified draft
+    tokens plus the verifier's correction (or bonus) token."""
+    n = 0
+    for d, e in zip(draft, exact):
+        if int(d) != int(e):
+            break
+        n += 1
+    return n

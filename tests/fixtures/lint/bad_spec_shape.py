@@ -1,0 +1,27 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""BAD (speculative zero-retrace): the draft config is traced DATA and
+the draft depth is a host loop count bounded by the static max_k —
+letting either pick a shape or steer Python control flow in a traced
+body compiles one executable per (k, draft-cfg) cell and kills the
+live sweep (rule: cfg-shape)."""
+import jax.numpy as jnp
+
+
+def f(x, draft_k):
+    window = jnp.zeros((draft_k, 4))     # depth-dependent verify window
+    return x + window.sum()
+
+
+def g(logits, draft_cfg):
+    if draft_cfg > 16:                   # Python branch on the traced knob
+        return logits * 2.0
+    return logits
+
+
+def h(x, spec_k):
+    pos = jnp.arange(spec_k)             # depth-dependent iota
+    return x + pos.sum()
+
+
+def k(tokens, draft_config):
+    return tokens.reshape(draft_config, -1)  # knob value as a shape

@@ -1,0 +1,25 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""GOOD: the speculative knobs stay data / host loop counts — the
+verify window is shaped by the STATIC max_k, the draft config is a
+gather index into traced tables, and depth branches happen on the
+Python default, never the traced value."""
+import jax.numpy as jnp
+
+MAX_K = 7
+
+
+def f(x, draft_k):
+    window = jnp.zeros((MAX_K + 1, 4))         # static window shape
+    live = jnp.arange(MAX_K + 1) < draft_k     # depth as a data MASK
+    return x + (window.sum(-1) * live).sum()
+
+
+def g(logits, draft_cfg, table):
+    if draft_cfg is None:                      # Python-default dispatch
+        return logits
+    return logits * table[draft_cfg]           # knob as a gather INDEX
+
+
+def h(x, spec_k):
+    posv = jnp.asarray(spec_k)[None]           # data operand, not shape
+    return x * jnp.where(posv > 0, 1.0, 0.0)

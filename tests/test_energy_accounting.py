@@ -150,6 +150,69 @@ def test_moe_engine_charges_energy_log_at_collapsed_rate(moe_engine):
         assert pj == pytest.approx(rate, rel=1e-12), kind
 
 
+# --- probes and speculative passes are billed (PR 9 satellite) -------------
+
+def test_probe_decodes_are_billed_and_excluded_from_serve_counters():
+    """Shadow probes are real executed exact-config decodes.  Pre-fix
+    they never reached ``_count_energy``, so the energy_log — whose
+    rows are documented to sum to the report totals — undercounted what
+    actually ran.  Now every probe adds a ``kind="probe"`` row at the
+    exact rate, the totals still equal the row sum, and the serve-only
+    counters (the scheduler's measured-pJ/token window) exclude it."""
+    from repro.serve.scheduler import PowerBudgetScheduler
+    T, cfg, params = _small_model()
+    sched = PowerBudgetScheduler(10.0, probe_every=1, retune_every=10**9)
+    eng = Engine(params, cfg, max_batch=1, approx_cfg=1, scheduler=sched)
+    eng.submit(Request(rid=0, prompt=np.arange(6) % 64,
+                       max_new_tokens=4))
+    eng.run(max_ticks=40)
+    rows = list(eng.energy_log)
+    probe_rows = [r for r in rows if r[0] == "probe"]
+    assert len(probe_rows) == sched.n_probes > 0
+    for _, _, pj in probe_rows:           # probes run at the EXACT rate
+        assert pj == pytest.approx(float(ENERGY_PER_MAC_PJ[0]),
+                                   rel=1e-12)
+    # rows still sum exactly to the lifetime totals, probes included
+    assert sum(t * pj for _, t, pj in rows) == pytest.approx(
+        eng.mac_energy_pj_per_param, rel=1e-12)
+    assert sum(t for _, t, _ in rows) == eng.n_tokens_charged
+    # the serve-only view is the same sum MINUS the probe rows
+    assert sum(t * pj for k, t, pj in rows if k != "probe") \
+        == pytest.approx(eng.serve_mac_energy_pj_per_param, rel=1e-12)
+    assert sum(t for k, t, _ in rows if k != "probe") \
+        == eng.n_serve_tokens_charged < eng.n_tokens_charged
+
+
+def test_speculative_passes_land_in_the_same_accounting():
+    """Draft steps bill at the DRAFT config, each verify pass as one
+    service-config weight-pass per slot — and the rows keep summing to
+    the totals (the spec path uses the same ``_count_energy``)."""
+    from repro.serve.speculative import SpecConfig
+    T, cfg, params = _small_model()
+    eng = Engine(params, cfg, max_batch=1, max_len=64,
+                 spec=SpecConfig(draft_cfg=8, k=2, max_k=2))
+    eng.submit(Request(rid=0, prompt=np.arange(6) % 64,
+                       max_new_tokens=6))
+    eng.run(max_ticks=60)
+    rows = list(eng.energy_log)
+    kinds = [k for k, _, _ in rows]
+    assert "spec_draft" in kinds and "spec_verify" in kinds
+    assert kinds.count("spec_verify") == eng.n_verify_steps
+    for k, _, pj in rows:
+        if k == "spec_draft":             # drafts at the draft config
+            assert pj == pytest.approx(float(ENERGY_PER_MAC_PJ[8]),
+                                       rel=1e-12)
+        elif k == "spec_verify":          # verify at the pool config
+            assert pj == pytest.approx(float(ENERGY_PER_MAC_PJ[0]),
+                                       rel=1e-12)
+    assert sum(t * pj for _, t, pj in rows) == pytest.approx(
+        eng.mac_energy_pj_per_param, rel=1e-12)
+    assert sum(t for _, t, _ in rows) == eng.n_tokens_charged
+    # spec passes ARE service traffic: they stay in the serve counters
+    assert eng.serve_mac_energy_pj_per_param == pytest.approx(
+        eng.mac_energy_pj_per_param, rel=1e-12)
+
+
 # --- the shared joules/token view ------------------------------------------
 
 def test_energy_per_token_pj_matches_energy_per_mac():

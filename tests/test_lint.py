@@ -30,11 +30,12 @@ BAD = {
     "bad_injected_clock": "injected-clock",       # historical: PR 4
     "bad_pallas_hygiene": "pallas-hygiene",
     "bad_table_shape": "cfg-shape",               # PR 8 paged-KV operands
+    "bad_spec_shape": "cfg-shape",                # PR 9 speculative knobs
 }
 GOOD = ["good_trace_safety", "good_cfg_shape", "good_single_rounding",
         "good_bounded_state", "good_resilience_tick",
         "good_injected_clock", "good_pallas_hygiene",
-        "good_suppression", "good_table_shape"]
+        "good_suppression", "good_table_shape", "good_spec_shape"]
 
 
 @pytest.mark.parametrize("stem,rule_id", sorted(BAD.items()))

@@ -18,6 +18,11 @@ CONFIG_NAMES = {"cfg", "config", "approx_cfg", "approx_config", "error_cfg"}
 TABLE_NAMES = {"block_table", "block_tables", "tables", "page_idx",
                "page_table", "page_indices", "seq_len", "seq_lens",
                "cache_len"}
+# speculative-decoding knobs: the draft config is traced DATA and the
+# draft depth is a HOST loop count bounded by the static max_k — if
+# either picks a shape or steers a Python branch in a traced body, the
+# live (k, draft-cfg) sweep compiles one executable per cell (PR 9)
+SPEC_NAMES = {"draft_cfg", "draft_config", "draft_k", "spec_k", "k_draft"}
 SCALAR_PREFETCH = {"cfg_ref", "rows_ref", "xscale_ref", "bt_ref", "len_ref"}
 LAX_HOFS = {"scan", "cond", "while_loop", "fori_loop", "switch", "map",
             "associative_scan"}
@@ -250,11 +255,14 @@ def cfg_shape(ctx: FileContext):
     exists to avoid.  The paged-KV table/length names (TABLE_NAMES) are
     held to the same bar: block tables and sequence lengths are data
     operands of the one compiled decode step, so a shape or traced
-    branch derived from them retraces per occupancy instead."""
+    branch derived from them retraces per occupancy instead.  The
+    speculative knobs (SPEC_NAMES) likewise: the draft config is traced
+    data and the draft depth a host loop count — only the static
+    ``max_k`` window may shape anything (PR 9)."""
     if not ctx.in_scope(SRC + "nn/", SRC + "kernels/", SRC + "serve/"):
         return
     shape_ctors = {"zeros", "ones", "full", "empty", "arange"}
-    watched = CONFIG_NAMES | TABLE_NAMES
+    watched = CONFIG_NAMES | TABLE_NAMES | SPEC_NAMES
 
     def problematic(test: ast.AST, names=watched) -> ast.Name | None:
         """First config Name in `test` that is not inside an isinstance
@@ -291,6 +299,13 @@ def cfg_shape(ctx: FileContext):
                 return name
         return None
 
+    def _kind(name: str) -> str:
+        if name in CONFIG_NAMES:
+            return "config"
+        if name in SPEC_NAMES:
+            return "speculative-knob"
+        return "block-table/length"
+
     # serve/ is mostly host loop (branching on Python-int configs is its
     # job); there the branch check applies only inside traced bodies.
     branch_everywhere = ctx.in_scope(SRC + "nn/", SRC + "kernels/")
@@ -303,8 +318,7 @@ def cfg_shape(ctx: FileContext):
                 and (branch_everywhere or node in traced_nodes):
             bad = problematic(node.test)
             if bad is not None:
-                kind = ("config" if bad.id in CONFIG_NAMES
-                        else "block-table/length")
+                kind = _kind(bad.id)
                 yield ctx.finding(
                     node.test, "cfg-shape",
                     f"Python branch on {kind} value '{bad.id}' — control "
@@ -329,8 +343,7 @@ def cfg_shape(ctx: FileContext):
                 continue     # jnp.shape(cfg)/cfg.shape is static metadata
             hits = _bare_names(arg, watched, ctx.parents)
             if hits:
-                kind = ("config" if hits[0].id in CONFIG_NAMES
-                        else "block-table/length")
+                kind = _kind(hits[0].id)
                 yield ctx.finding(
                     node, "cfg-shape",
                     f"{kind} value '{hits[0].id}' in a shape position of "
