@@ -617,6 +617,28 @@ def bench_speculative():
         json.dump(out, fh, indent=2)
 
 
+def bench_traffic():
+    """The PR-10 tentpole quantified: traffic-aware per-class budgets.
+
+    Serves three seeded traffic scenarios (steady Poisson, 2x overload
+    spike, mixed-class) through scheduler-attached engines and scores
+    each as a throughput–latency–energy Pareto point.  The bars (every
+    class's measured pJ/token within 5 % of its split budget after the
+    re-split loop converges, spike availability >= the exact-only arm
+    at the same power cap for less energy, zero retraces across the
+    whole sweep) are ENFORCED in ``benchmarks/traffic.py``: a
+    violation raises and becomes the ERROR row CI greps for.  Emits
+    BENCH_traffic.json (CI artifact).
+    """
+    import json
+
+    from benchmarks.traffic import run_traffic
+
+    out = run_traffic()
+    with open("BENCH_traffic.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+
+
 BENCHES = {
     "table1": bench_table1_multiplier_metrics,
     "fig5": bench_fig5_power_improvement,
@@ -632,6 +654,7 @@ BENCHES = {
     "sharded_decode": bench_sharded_decode,
     "paged_serving": bench_paged_serving,
     "speculative": bench_speculative,
+    "traffic": bench_traffic,
     "lm_energy": bench_lm_energy_model,
     "roofline": bench_roofline_table,
     "runtime_config": bench_runtime_config_switch,
@@ -640,7 +663,8 @@ BENCHES = {
 # every bench that writes a BENCH_*.json artifact — `run.py all`
 # regenerates the full artifact set in one command
 JSON_BENCHES = ["pallas_path", "moe_path", "scheduler", "resilience",
-                "sharded_decode", "paged_serving", "speculative"]
+                "sharded_decode", "paged_serving", "speculative",
+                "traffic"]
 
 
 def main() -> None:

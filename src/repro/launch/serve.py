@@ -53,6 +53,16 @@ control axis):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --draft-cfg 8 --draft-k 3 [--paged]
+
+Per-class power budgets (DESIGN.md §13): --classes turns the --traffic
+stream into a weighted class mix, and any class that declares a
+BUDGET_SHARE splits the --budget-frac energy budget across classes —
+the scheduler tracks per-class attribution and re-splits the shares
+from measured usage every retune:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --traffic 0.6 --ticks 60 --budget-frac 0.85 \
+      --classes chat:2:0.5,bulk:1:0.5
 """
 from __future__ import annotations
 
@@ -113,6 +123,13 @@ def main():
                     help="traffic burst window (ticks), e.g. 10:40:4.0")
     ap.add_argument("--ticks", type=int, default=60,
                     help="engine ticks to drive under --traffic")
+    ap.add_argument("--classes", default=None, metavar="SPEC",
+                    help="mixed-class traffic under --traffic: comma "
+                         "list of NAME:WEIGHT[:BUDGET_SHARE], e.g. "
+                         "chat:2:0.5,bulk:1:0.5 — budget shares split "
+                         "the --budget-frac budget across classes and "
+                         "the scheduler re-splits them from measured "
+                         "usage (DESIGN.md §13)")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache: block pool + per-request "
                          "block tables, chunked prefill, prefix "
@@ -223,16 +240,36 @@ def main():
     offered = None
     if args.traffic is not None:
         from repro.serve.traffic import (TrafficClass, TrafficGenerator,
-                                         slo_report)
+                                         class_budget_shares, slo_report)
         spikes = ()
         if args.spike:
             a, b, m = args.spike.split(":")
             spikes = ((int(a), int(b), float(m)),)
+        if args.classes:
+            classes = []
+            for item in args.classes.split(","):
+                parts = item.split(":")
+                classes.append(TrafficClass(
+                    parts[0], ttft_slo_s=args.ttft_slo,
+                    e2e_slo_s=args.e2e_slo, prompt_len=8,
+                    max_new_tokens=args.max_new,
+                    weight=float(parts[1]) if len(parts) > 1 else 1.0,
+                    budget_share=(float(parts[2]) if len(parts) > 2
+                                  else None)))
+            classes = tuple(classes)
+            shares = class_budget_shares(classes)
+            if shares:
+                assert sched is not None, \
+                    "--classes budget shares need --budget-frac"
+                sched.set_class_budgets(shares)
+                print(f"per-class budgets: {shares} "
+                      f"(re-split from usage each retune)")
+        else:
+            classes = (TrafficClass("cli", ttft_slo_s=args.ttft_slo,
+                                    e2e_slo_s=args.e2e_slo, prompt_len=8,
+                                    max_new_tokens=args.max_new),)
         gen = TrafficGenerator(
-            (TrafficClass("cli", ttft_slo_s=args.ttft_slo,
-                          e2e_slo_s=args.e2e_slo, prompt_len=8,
-                          max_new_tokens=args.max_new),),
-            rate_per_tick=args.traffic, seed=0,
+            classes, rate_per_tick=args.traffic, seed=0,
             vocab_size=cfg.vocab_size, spikes=spikes)
         offered = []
         for t in range(args.ticks):
@@ -270,6 +307,14 @@ def main():
               f"{s['backoffs']} backoffs), energy/token "
               f"{measured/1e6:.3f} uJ vs budget "
               f"{s['budget_pj_per_token']/1e6:.3f} uJ")
+        if sched.class_shares:
+            for name in sorted(sched.class_shares):
+                dn = eng.serve_tokens_by_class.get(name, 0)
+                de = eng.serve_energy_by_class.get(name, 0.0)
+                pj = de / dn * eng.macs_per_token if dn else 0.0
+                print(f"  class {name}: {dn} tokens, "
+                      f"{pj/1e6:.3f} uJ/token, final share "
+                      f"{sched.class_shares[name]:.3f}")
     rr = eng.resilience_report()
     if any((rr["rejected"], rr["expired"], rr["failed"], rr["retries"],
             rr["nan_events"], injector, brownout)):

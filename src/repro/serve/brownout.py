@@ -15,6 +15,15 @@ probe backoff: a level change starts a ``hold_ticks`` freeze, and
 recovery additionally needs a ``hold_ticks``-long calm streak — a
 single good tick never whipsaws the pool back up.
 
+Pressure reads through ``serve.telemetry`` (DESIGN.md §13): the
+utilization/fault-delta readings land in bounded rolling windows (the
+report's median view), the calm streak is a ``telemetry.Streak``, and a
+median/MAD ``SpikeDetector`` on utilization is the early-warning axis —
+a sudden load jump well above the recent window fires BEFORE the
+absolute watermark is crossed, giving escalation a head start on fast
+spikes (it ORs into pressure; the watermark semantics are unchanged on
+slow ramps).
+
 Composition with ``PowerBudgetScheduler`` (the two must not fight over
 ``engine.set_approx_cfg``): when the engine runs a scheduler, the
 brownout NEVER writes configs itself — it scales the scheduler's
@@ -34,6 +43,7 @@ from collections import deque
 import numpy as np
 
 from repro.core.power_model import MAC_SAVING_FRAC
+from repro.serve.telemetry import RollingWindow, SpikeDetector, Streak
 
 DEFAULT_LADDER = (0, 8, 16, 24, 31)
 
@@ -75,7 +85,14 @@ class BrownoutController:
         self.n_escalations = 0
         self.n_recoveries = 0
         self._hold = 0
-        self._calm = 0
+        # telemetry (DESIGN.md §13): pressure readings live in bounded
+        # rolling windows, calm is a Streak, and a MAD spike detector
+        # on utilization is the early-warning axis
+        self._calm = Streak()
+        self.util_window = RollingWindow(maxlen=64)
+        self.fault_window = RollingWindow(maxlen=64)
+        self.util_spike = SpikeDetector(window=32, threshold=4.0,
+                                        min_scale=0.05, min_samples=8)
         self._base_cfg: np.ndarray | None = None
         self._last_faults = 0
         # bounded audit window: (tick-local level, utilization,
@@ -105,23 +122,31 @@ class BrownoutController:
         util = max(float(bp["utilization"]),
                    float(bp.get("kv_utilization", 0.0)))
         fault_delta = self._fault_pressure(engine)
+        self.util_window.push(util)
+        self.fault_window.push(float(fault_delta))
+        # early warning: a utilization jump far above the recent window
+        # median (MAD units) counts as pressure BEFORE the absolute
+        # watermark trips — fast spikes escalate a tick early, slow
+        # ramps see identical watermark behavior
+        early = self.util_spike.observe(util)
         pressure = (util >= self.high_watermark
-                    or fault_delta >= self.fault_threshold)
+                    or fault_delta >= self.fault_threshold
+                    or early)
         calm = util <= self.low_watermark and fault_delta == 0
-        self._calm = self._calm + 1 if calm else 0
+        calm_len = self._calm.observe(calm)
         if self._hold > 0:
             self._hold -= 1
         elif pressure and self.level < len(self.ladder) - 1:
             self.level += 1
             self.n_escalations += 1
             self._hold = self.hold_ticks
-            self._calm = 0
+            self._calm.reset()
             self._apply(engine)
-        elif calm and self.level > 0 and self._calm >= self.hold_ticks:
+        elif calm and self.level > 0 and calm_len >= self.hold_ticks:
             self.level -= 1
             self.n_recoveries += 1
             self._hold = self.hold_ticks
-            self._calm = 0
+            self._calm.reset()
             self._apply(engine)
         self.history.append((self.level, util, fault_delta))
 
@@ -152,4 +177,7 @@ class BrownoutController:
         return {"level": self.level, "ladder": list(self.ladder),
                 "escalations": self.n_escalations,
                 "recoveries": self.n_recoveries,
+                "early_warnings": self.util_spike.n_spikes,
+                "util_median": self.util_window.median(),
+                "fault_median": self.fault_window.median(),
                 "budget_scale": self.budget_scale()}

@@ -493,18 +493,26 @@ class Engine:
         # summing every executed row, probes included)
         self.serve_mac_energy_pj_per_param = 0.0
         self.n_serve_tokens_charged = 0
+        # per-class split of the serve-only integrals (DESIGN.md §13):
+        # class name -> accumulated pJ/param charge and tokens.  Fed by
+        # every non-probe _count_energy row; the scheduler's per-class
+        # budget loop (set_class_budgets) diffs these per retune.
+        self.serve_energy_by_class: dict[str, float] = {}
+        self.serve_tokens_by_class: dict[str, int] = {}
         # emitted-token counter (every token appended to a request):
         # the speculative bench's pJ/token denominator — under
         # speculation one verify step emits up to k+1 of these
         self.n_tokens_emitted = 0
         # every energy charge, in order: (kind, tokens, per-MAC pJ at
-        # the executed config) — the report totals are exactly the sum
-        # of these rows while nothing has been evicted
-        # (tests/test_energy_accounting.py).  BOUNDED: the totals live
-        # in the accumulators above, the log is an audit window, so a
-        # long-running engine must not grow it forever.
-        self.energy_log: deque[tuple[str, int, float]] = deque(
-            maxlen=65536)
+        # the executed config, traffic class) — the report totals are
+        # exactly the sum of these rows while nothing has been evicted,
+        # and per-class rows sum to the per-class counters
+        # (tests/test_energy_accounting.py).  Class is None on probe
+        # rows (measurement belongs to no class).  BOUNDED: the totals
+        # live in the accumulators above, the log is an audit window,
+        # so a long-running engine must not grow it forever.
+        self.energy_log: deque[tuple[str, int, float, str | None]] = \
+            deque(maxlen=65536)
         self.completed: list[Request] = []
         self._macs_per_token: float | None = None
 
@@ -862,12 +870,36 @@ class Engine:
         return energy_per_token_pj(cfg_vec,
                                    moe_mac_frac=self._moe_mac_frac)
 
+    def _cls_counts(self, active: list[int]) -> dict[str, int]:
+        """Token split of one pooled charge by the active slots'
+        traffic classes (one token per slot per step) — the ``cls``
+        operand of ``_count_energy`` for batched charges."""
+        out: dict[str, int] = {}
+        for i in active:
+            c = self.slots[i].cls or "default"
+            out[c] = out.get(c, 0) + 1
+        return out
+
     def _count_energy(self, tokens: int, cfg_vec: np.ndarray,
-                      kind: str = "decode"):
+                      kind: str = "decode", cls=None):
+        """Charge ``tokens`` executed tokens at ``cfg_vec``.
+
+        ``cls`` attributes the charge to traffic classes (DESIGN.md
+        §13): a class name, a ``{class: tokens}`` split of a pooled
+        charge (``_cls_counts``), or None — unattributed serve charges
+        land on class "default"; probe charges are classless (they are
+        measurement, not any class's traffic).  One ``energy_log`` row
+        is appended PER CLASS, so rows keep summing to the report
+        totals and per-class rows sum to the per-class counters."""
         pj = self._energy_pj_mean(cfg_vec)
         self.mac_energy_pj_per_param += tokens * pj
         self.exact_energy_pj_per_param += tokens * float(_ENERGY_PJ[0])
         self.n_tokens_charged += tokens
+        if isinstance(cls, str) or cls is None:
+            split = {cls or "default": int(tokens)}
+        else:
+            split = {str(c): int(n) for c, n in cls.items() if n}
+        assert sum(split.values()) == int(tokens), (split, tokens)
         if kind != "probe":
             # shadow probes (scheduler.on_step) are billed — they are
             # real executed decodes, and energy_log rows must keep
@@ -876,7 +908,15 @@ class Engine:
             # as service traffic in the budget-feedback integral
             self.serve_mac_energy_pj_per_param += tokens * pj
             self.n_serve_tokens_charged += tokens
-        self.energy_log.append((kind, tokens, pj))
+            for c, n in split.items():
+                self.serve_energy_by_class[c] = (
+                    self.serve_energy_by_class.get(c, 0.0) + n * pj)
+                self.serve_tokens_by_class[c] = (
+                    self.serve_tokens_by_class.get(c, 0) + n)
+            for c, n in sorted(split.items()):
+                self.energy_log.append((kind, n, pj, c))
+        else:
+            self.energy_log.append((kind, tokens, pj, None))
 
     def _admission_power_ok(self, req_cfg: np.ndarray,
                             pinned: bool) -> bool:
@@ -940,7 +980,8 @@ class Engine:
                         self.params, tokens, self._replicate(req_cfg))
                 self.n_prefill_tokens += true_len
                 # energy charges the EXECUTED width (padded)
-                self._count_energy(tokens.shape[1], req_cfg, "prefill")
+                self._count_energy(tokens.shape[1], req_cfg, "prefill",
+                                   cls=req.cls)
                 self._splice_cache(slot, row_cache)
                 self.slot_pos[slot] = true_len
                 self.slot_cfg[slot] = req_cfg
@@ -1180,7 +1221,8 @@ class Engine:
                 # completion samples from the last true one
                 logits = logits[:, count - 1]
             self.n_prefill_tokens += count       # TRUE tokens advanced
-            self._count_energy(C, cfg_vec, "prefill")  # executed width
+            self._count_energy(C, cfg_vec, "prefill",  # executed width
+                               cls=req.cls)
             self.seq_lens[slot] = end
             self.slot_pos[slot] = end
             prog["next"] = end
@@ -1339,7 +1381,8 @@ class Engine:
                     draft_acfg)
                 if not np.isfinite(np.asarray(dlogits)[active]).all():
                     raise _SpecAbort("non-finite draft logits")
-                self._count_energy(len(active), draft_vec, "spec_draft")
+                self._count_energy(len(active), draft_vec, "spec_draft",
+                                   cls=self._cls_counts(active))
                 self.n_draft_tokens += len(active)
                 tokens[:, j] = np.asarray(
                     jnp.argmax(dlogits, axis=-1).astype(jnp.int32))
@@ -1380,7 +1423,8 @@ class Engine:
         # the verify chunk is ONE weight-pass over the params per slot:
         # one service-config token-charge each (weight-bound energy
         # model, DESIGN.md §12) vs k draft-config charges above
-        self._count_energy(len(active), pool_cfg, "spec_verify")
+        self._count_energy(len(active), pool_cfg, "spec_verify",
+                           cls=self._cls_counts(active))
         exact = np.asarray(jnp.argmax(vlogits, axis=-1).astype(jnp.int32))
         a_pool = k + 1
         accepted: dict[int, int] = {}
@@ -1459,7 +1503,8 @@ class Engine:
                 if not np.isfinite(np.asarray(dlogits)[active]).all():
                     raise _SpecAbort("non-finite draft logits")
                 self.cache = new_leaves
-                self._count_energy(len(active), draft_vec, "spec_draft")
+                self._count_energy(len(active), draft_vec, "spec_draft",
+                                   cls=self._cls_counts(active))
                 self.n_draft_tokens += len(active)
                 tokens[:, j] = np.asarray(
                     jnp.argmax(dlogits, axis=-1).astype(jnp.int32))
@@ -1506,7 +1551,8 @@ class Engine:
                 break
             pending.pop(0)
             self.cache = new_leaves
-            self._count_energy(1, pool_cfg, "spec_verify")
+            self._count_energy(1, pool_cfg, "spec_verify",
+                               cls=self.slots[i].cls)
             self.n_verify_steps += 1
             committed += 1
             exact = np.asarray(jnp.argmax(
@@ -1610,7 +1656,8 @@ class Engine:
         self.cache = new_leaves
         self._retry_streak = 0
         self.n_decode_steps += 1
-        self._count_energy(len(active), pool_cfg)
+        self._count_energy(len(active), pool_cfg,
+                           cls=self._cls_counts(active))
         feedback = 1 if inj is None else inj.probe_multiplicity()
         if self.scheduler is not None:
             # `cache` still holds the PRE-step operands (tables, lens,
@@ -1725,7 +1772,8 @@ class Engine:
         self._retry_streak = 0
         self.n_decode_steps += 1
         # one token comes out of every active slot this tick
-        self._count_energy(len(active), pool_cfg)
+        self._count_energy(len(active), pool_cfg,
+                           cls=self._cls_counts(active))
         # drop_probe/dup_probe chaos: scheduler feedback is delivered
         # 0, 1 or 2 times — the control loop must tolerate lost and
         # at-least-once telemetry
@@ -1899,7 +1947,9 @@ class Engine:
                       "mac_energy_pj_per_param",
                       "exact_energy_pj_per_param", "n_tokens_charged",
                       "serve_mac_energy_pj_per_param",
-                      "n_serve_tokens_charged", "n_tokens_emitted",
+                      "n_serve_tokens_charged",
+                      "serve_energy_by_class", "serve_tokens_by_class",
+                      "n_tokens_emitted",
                       "n_spec_ticks", "n_spec_aborts", "n_draft_tokens",
                       "n_spec_emitted", "n_verify_steps",
                       "n_rejected", "n_expired", "n_failed", "n_retries",
@@ -1924,8 +1974,11 @@ class Engine:
         meta = {"slots": [_pack_request(r) for r in self.slots],
                 "queue": [_pack_request(r) for r in self.queue],
                 "completed": [_pack_request(r) for r in self.completed],
-                "counters": {k: getattr(self, k)
-                             for k in self._SNAP_COUNTERS}}
+                # dict-valued counters (per-class splits) are copied so
+                # the snapshot can never alias live accumulators
+                "counters": {k: (dict(v) if isinstance(v, dict) else v)
+                             for k in self._SNAP_COUNTERS
+                             for v in (getattr(self, k),)}}
         if self.paged is not None:
             # allocator refcounts travel as an array; the prefix index
             # and per-slot ownership are msgpack-able structures

@@ -55,6 +55,19 @@ back the POOL assignment off) and runs the draft depth ``k`` through the
 same one-notch hysteresis: zero-acceptance bursts step ``draft_k`` down
 (floor 1), hold, then recover one notch per retune.
 
+Per-class budgets (PR 10, DESIGN.md §13): ``set_class_budgets({cls:
+frac})`` splits the budget across traffic classes.  Class c's pJ/token
+target is ``share_c / mix_c * B`` (mix = its measured token share), so
+the token-weighted sum of class targets is always exactly the global
+budget and the planner still plans ONE pool; each retune diffs the
+engine's per-class serve counters (``serve_energy_by_class`` /
+``serve_tokens_by_class``, fed by ``energy_log`` class attribution) and
+re-splits the shares from measured usage (``resplit_shares``) —
+unspent budget flows to starved classes, floors guarantee a minimum
+slice.  All smoothed signals — the probe-agreement window, the backoff
+streaks, the measured-energy median and its spike early-warning — read
+through ``serve.telemetry`` (no ad-hoc EWMA/streak state).
+
 Usage::
 
     sched = PowerBudgetScheduler(budget_pj_per_token=0.8 * exact_pj)
@@ -76,10 +89,54 @@ from repro.core.controller import (Candidate, greedy_allocate,
 from repro.core.error_metrics import mred_table
 from repro.core.power_model import (ENERGY_PER_MAC_PJ, MAC_SAVING_FRAC,
                                     energy_per_token_pj, error_rank)
+from repro.serve.telemetry import (RollingWindow, SpikeDetector, Streak,
+                                   ewma)
 
 # every non-exact config is an allocation rung by default: the ladder's
 # consecutive saving gaps bound how closely the budget can be tracked
 DEFAULT_LADDER = tuple(range(1, N_CONFIGS))
+
+
+def resplit_shares(shares: Mapping[str, float],
+                   usage: Mapping[str, float],
+                   floors: Mapping[str, float]) -> dict[str, float]:
+    """Re-split per-class budget shares from measured usage.
+
+    ``usage[c]`` is class c's measured-over-target energy ratio for the
+    last window (> 1 = the class ran hot / was starved by its split,
+    < 1 = it left budget unspent; missing = no signal, treated as 1.0).
+    The raw re-split is ``share_c * usage_c`` — unspent budget flows
+    from under-using classes to hot ones — renormalized to sum EXACTLY
+    to 1 with iterative floor-pinning: any class whose renormalized
+    share would fall below its floor is pinned AT the floor and the
+    remaining mass is split proportionally among the rest, so a quiet
+    class can never be starved out of its guaranteed slice.  Pure
+    function (property-tested: output sums to 1 and respects every
+    floor whenever the floors themselves sum to ≤ 1)."""
+    names = sorted(shares)
+    assert names, "no classes to split across"
+    floors = {c: max(float(floors.get(c, 0.0)), 0.0) for c in names}
+    raw = {c: max(float(shares[c]) * float(usage.get(c, 1.0)), 0.0)
+           for c in names}
+    pinned: set[str] = set()
+    for _ in range(len(names)):
+        free = [c for c in names if c not in pinned]
+        mass = 1.0 - sum(floors[c] for c in pinned)
+        tot = sum(raw[c] for c in free)
+        if not free or tot <= 0.0 or mass <= 0.0:
+            break
+        out = {c: floors[c] for c in pinned}
+        out.update({c: mass * raw[c] / tot for c in free})
+        low = [c for c in free if out[c] < floors[c]]
+        if not low:
+            return out
+        pinned.update(low)
+    # degenerate (every class at its floor, zero usage everywhere, or
+    # oversubscribed floors): scale the floors themselves to sum 1
+    tot = sum(floors.values())
+    if tot > 0.0:
+        return {c: floors[c] / tot for c in names}
+    return {c: 1.0 / len(names) for c in names}
 
 
 class _EnergyState:
@@ -215,23 +272,39 @@ class PowerBudgetScheduler:
         self.moe_mac_frac = 0.0
         self.assignment: dict[tuple, int] = {}
 
-        # online state
+        # online state — every smoothed/streaked signal reads through
+        # serve.telemetry (DESIGN.md §13): the probe-agreement window,
+        # the pool and draft-depth hysteresis streaks, the measured-
+        # pJ/token window with its spike early-warning
         self.est: dict[tuple, float] = dict(sensitivity or {})
         self.hold: dict[tuple, tuple[int, int]] = {}  # key -> (cap, expiry)
         self.tick = 0
         self.n_probes = 0
         self.n_agree = 0
-        self._win_probes = 0
-        self._win_agree = 0
-        self._streak = 0
+        self.agree_window = RollingWindow(maxlen=4096)  # since last retune
+        self.pool_streak = Streak()
         self.n_backoffs = 0
         # speculative draft-depth axis (PR 9): configured by
         # Engine(spec=...) via configure_spec; None = speculation off
         self.draft_k: int | None = None
         self._k0: int | None = None
-        self._k_streak = 0
+        self.spec_streak = Streak()
         self._k_hold_until = 0
         self._mark = (0.0, 0)          # (pj_per_param, tokens) at last retune
+        # measured-energy telemetry: windowed median over retunes plus
+        # a MAD spike detector on measured/budget (scale-free), whose
+        # firing is surfaced in the retune history as an early warning
+        self.measured_window = RollingWindow(maxlen=64)
+        self.measured_spike = SpikeDetector(window=32, threshold=4.0,
+                                            min_scale=0.02, min_samples=4)
+        # per-class budget splits (set_class_budgets): shares over
+        # traffic-class names, re-split each retune from measured
+        # per-class energy; empty = one global budget
+        self.class_shares: dict[str, float] = {}
+        self._class_base: dict[str, float] = {}
+        self._class_floor_frac = 0.25
+        self._class_marks: dict[str, tuple[float, int]] = {}
+        self.class_report: dict[str, dict] = {}
         # bounded audit window (one entry per retune/backoff): the
         # counters above carry the lifetime stats
         self.history: deque = deque(maxlen=4096)
@@ -257,6 +330,8 @@ class PowerBudgetScheduler:
         self.bind(engine.approx_cfg.shape, engine.macs_per_token,
                   engine._moe_mac_frac, initial=engine.approx_cfg)
         self._mark = self._serve_counters(engine)
+        if self.class_shares:
+            self._mark_classes(engine)
 
     @staticmethod
     def _serve_counters(engine) -> tuple[float, int]:
@@ -428,11 +503,9 @@ class PowerBudgetScheduler:
         disagreement must never step the pool assignment down (the
         draft depth has its own hysteresis axis)."""
         self.n_probes += 1
-        self._win_probes += 1
+        self.n_agree += int(agree)
+        self.agree_window.push(1.0 if agree else 0.0)
         r = 0.0 if agree else 1.0
-        if agree:
-            self.n_agree += 1
-            self._win_agree += 1
         ran = (self._tensor(self.assignment) if executed_cfg is None
                else np.asarray(executed_cfg))
         up = [k for k in self.keys if ran[k] > 0]
@@ -446,17 +519,16 @@ class PowerBudgetScheduler:
             for k, wk in zip(up, w):
                 cfg_k = int(ran[k])
                 cur = self._delta(k, cfg_k)
-                new = (1.0 - self.ema) * cur + self.ema * r * float(wk)
                 # never forget the model entirely: floor at a fraction
                 # of the MRED prior
                 self.est[(k, cfg_k)] = max(
-                    new, self.prior_floor * self._prior(cfg_k))
+                    ewma(cur, r * float(wk), self.ema),
+                    self.prior_floor * self._prior(cfg_k))
         if not ladder:
             return
-        self._streak = 0 if agree else self._streak + 1
-        if self._streak >= self.hysteresis:
+        if self.pool_streak.observe(not agree) >= self.hysteresis:
             self._backoff(ran)
-            self._streak = 0
+            self.pool_streak.reset()
 
     # -- speculative draft-depth axis (PR 9) -----------------------------
     def configure_spec(self, k: int) -> None:
@@ -464,7 +536,7 @@ class PowerBudgetScheduler:
         ``Engine.__init__``/``set_spec`` when speculation is on)."""
         self._k0 = int(k)
         self.draft_k = int(k)
-        self._k_streak = 0
+        self.spec_streak.reset()
 
     def record_spec(self, accepted: int, k: int, draft_cfg) -> None:
         """Fold one slot's speculative acceptance into the feedback
@@ -485,10 +557,10 @@ class PowerBudgetScheduler:
             self.record_probe(False, ran, ladder=False)
         if self.draft_k is None:
             return
-        self._k_streak = self._k_streak + 1 if accepted == 0 else 0
-        if self._k_streak >= self.hysteresis and self.draft_k > 1:
+        streak = self.spec_streak.observe(accepted == 0)
+        if streak >= self.hysteresis and self.draft_k > 1:
             self.draft_k -= 1
-            self._k_streak = 0
+            self.spec_streak.reset()
             self._k_hold_until = self.tick + self.hold_ticks
             self.history.append({"event": "spec_backoff",
                                  "tick": self.tick,
@@ -548,6 +620,17 @@ class PowerBudgetScheduler:
         measured = ((e1 - e0) / (n1 - n0) * self.macs_per_token
                     if n1 > n0 else None)
         self._mark = (e1, n1)
+        # measured-energy telemetry: feed the windowed median and the
+        # scale-free spike detector (measured over effective budget —
+        # a fired spike is the retune history's early warning that the
+        # loop is chasing, not tracking)
+        spike = False
+        if measured is not None:
+            self.measured_window.push(measured)
+            budget_eff = self.budget_pj_per_token * self.budget_scale
+            if budget_eff > 0.0:
+                spike = self.measured_spike.observe(measured / budget_eff)
+        class_budgets = self._retune_classes(engine)
         # draft-depth recovery: one notch back toward the configured k
         # per retune once a spec backoff's hold has expired (the mirror
         # of the config ladder's hold-expiry un-ban)
@@ -559,9 +642,8 @@ class PowerBudgetScheduler:
         if assignment != self.assignment:
             self.assignment = assignment
             engine.set_approx_cfg(self._tensor(assignment))
-        agree = (self._win_agree / self._win_probes
-                 if self._win_probes else None)
-        self._win_probes = self._win_agree = 0
+        agree = self.agree_window.mean()
+        self.agree_window.clear()
         self.history.append({
             "event": "retune", "tick": self.tick,
             "time": engine.clock(),
@@ -573,8 +655,11 @@ class PowerBudgetScheduler:
             "budget_pj_per_token": self.budget_pj_per_token,
             "modeled_pj_per_token": self._energy_pj(assignment),
             "measured_pj_per_token": measured,
+            "measured_median_pj_per_token": self.measured_window.median(),
+            "measured_spike": spike,
             "window_agreement": agree,
             "draft_k": self.draft_k,
+            "class_budgets": class_budgets,
             "assignment": self._tensor(assignment).tolist()})
 
     def quarantine(self, executed_cfg) -> None:
@@ -586,7 +671,7 @@ class PowerBudgetScheduler:
         The engine rolls the corrupted step back itself; this hook only
         moves the config policy."""
         self._backoff(np.asarray(executed_cfg))
-        self._streak = 0
+        self.pool_streak.reset()
 
     # -- reporting -------------------------------------------------------
     def set_budget(self, budget_pj_per_token: float) -> None:
@@ -600,6 +685,89 @@ class PowerBudgetScheduler:
         and brownout pressure composable in either order."""
         assert 0.0 < scale <= 1.0, scale
         self.budget_scale = float(scale)
+
+    # -- per-class budget splits (DESIGN.md §13) -------------------------
+    def set_class_budgets(self, shares: Mapping[str, float], *,
+                          floor_frac: float = 0.25) -> None:
+        """Split the global budget across traffic classes.
+
+        ``shares`` maps class name -> budget fraction (normalized to
+        sum 1).  Class c's pJ/token TARGET is ``share_c / mix_c * B``
+        where ``mix_c`` is its measured token share of the window and B
+        the effective global budget — so the token-weighted sum of the
+        class targets is always exactly B and the planner's pool budget
+        is untouched (one physical knob, one global loop; the class
+        layer is attribution + adaptation on top).  Each retune
+        re-splits the shares from measured usage via ``resplit_shares``
+        — a class running hot against its target pulls share from
+        classes leaving budget unspent — with every class floored at
+        ``floor_frac`` of its CONFIGURED share, so re-splitting never
+        starves a class out of its guaranteed slice."""
+        assert shares, "need at least one class share"
+        assert all(float(v) > 0.0 for v in shares.values()), shares
+        assert 0.0 < floor_frac < 1.0, floor_frac
+        tot = sum(float(v) for v in shares.values())
+        self._class_base = {str(c): float(v) / tot
+                            for c, v in shares.items()}
+        self.class_shares = dict(self._class_base)
+        self._class_floor_frac = float(floor_frac)
+        self.class_report = {}
+        self._class_marks = {}
+        if self.engine is not None:
+            self._mark_classes(self.engine)
+
+    def _mark_classes(self, engine) -> None:
+        """Snapshot each class's serve counters as the next window's
+        baseline (same diffing discipline as the global ``_mark``)."""
+        e_by = getattr(engine, "serve_energy_by_class", {})
+        n_by = getattr(engine, "serve_tokens_by_class", {})
+        for c in self.class_shares:
+            self._class_marks[c] = (float(e_by.get(c, 0.0)),
+                                    int(n_by.get(c, 0)))
+
+    def _retune_classes(self, engine) -> dict[str, dict] | None:
+        """Close each class's loop at retune: diff per-class serve
+        counters, score measured pJ/token against the class target, and
+        re-split the shares from usage.  Returns the per-class history
+        entry (None when class budgets are off or the engine predates
+        per-class counters)."""
+        if not self.class_shares:
+            return None
+        e_by = getattr(engine, "serve_energy_by_class", None)
+        n_by = getattr(engine, "serve_tokens_by_class", None)
+        if e_by is None or n_by is None:
+            return None
+        budget = self.budget_pj_per_token * self.budget_scale
+        deltas: dict[str, tuple[float, int]] = {}
+        tot_tok = 0
+        for c in self.class_shares:
+            e1 = float(e_by.get(c, 0.0))
+            n1 = int(n_by.get(c, 0))
+            e0, n0 = self._class_marks.get(c, (0.0, 0))
+            self._class_marks[c] = (e1, n1)
+            deltas[c] = (e1 - e0, n1 - n0)
+            tot_tok += n1 - n0
+        report: dict[str, dict] = {}
+        usage: dict[str, float] = {}
+        for c, share in self.class_shares.items():
+            de, dn = deltas[c]
+            mix = dn / tot_tok if tot_tok else 0.0
+            target = share / mix * budget if mix > 0.0 else None
+            measured = (de / dn * self.macs_per_token
+                        if dn > 0 else None)
+            if target and measured is not None:
+                usage[c] = measured / target
+            report[c] = {"share": share, "tokens": dn, "mix": mix,
+                         "target_pj_per_token": target,
+                         "measured_pj_per_token": measured}
+        floors = {c: self._class_floor_frac * b
+                  for c, b in self._class_base.items()}
+        self.class_shares = resplit_shares(self.class_shares, usage,
+                                           floors)
+        for c in report:
+            report[c]["next_share"] = self.class_shares[c]
+        self.class_report = report
+        return report
 
     def report(self) -> dict[str, Any]:
         retunes = [h for h in self.history if h["event"] == "retune"]
@@ -619,4 +787,8 @@ class PowerBudgetScheduler:
             "retunes": len(retunes),
             "ticks": self.tick,
             "draft_k": self.draft_k,
+            "measured_median_pj_per_token": self.measured_window.median(),
+            "spikes": self.measured_spike.n_spikes,
+            "class_shares": dict(self.class_shares) or None,
+            "class_budgets": self.class_report or None,
         }

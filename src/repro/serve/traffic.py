@@ -31,7 +31,10 @@ class TrafficClass:
     """One request class: its size and its service-level objectives.
 
     SLOs are in injected-clock seconds (None = no deadline); weight is
-    the class's relative share of arrivals."""
+    the class's relative share of arrivals; ``budget_share`` is its
+    slice of the scheduler's global energy budget (DESIGN.md §13) —
+    None opts the class out of per-class budgeting (all-None classes
+    leave the scheduler on one global budget)."""
     name: str
     ttft_slo_s: float | None = None
     e2e_slo_s: float | None = None
@@ -39,6 +42,21 @@ class TrafficClass:
     max_new_tokens: int = 16
     temperature: float = 0.0
     weight: float = 1.0
+    budget_share: float | None = None
+
+
+def class_budget_shares(classes: Sequence[TrafficClass]) -> dict:
+    """The ``{name: share}`` mapping for
+    ``PowerBudgetScheduler.set_class_budgets``, from the classes that
+    declare a ``budget_share``; classes without one default to their
+    arrival ``weight`` when ANY class declares a share (so a partial
+    declaration still covers the whole mix).  Empty when no class
+    declares a share — per-class budgeting stays off."""
+    if not any(c.budget_share is not None for c in classes):
+        return {}
+    return {c.name: (c.budget_share if c.budget_share is not None
+                     else c.weight)
+            for c in classes}
 
 
 class TrafficGenerator:

@@ -1,0 +1,26 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""BAD (telemetry/class-budget zero-retrace): spike scores and class
+budget splits are host control signals that feed the traced config
+DATA operand — letting one pick a shape or steer Python control flow
+in a traced body mints a new executable per telemetry reading (rule:
+cfg-shape)."""
+import jax.numpy as jnp
+
+
+def f(x, spike_score):
+    if spike_score > 4.0:                # Python branch on the signal
+        return x * 0.5
+    return x
+
+
+def g(x, class_budgets):
+    return jnp.zeros((class_budgets, 4))     # budget count as a shape
+
+
+def h(tokens, class_shares):
+    return tokens.reshape(class_shares, -1)  # split value as a shape
+
+
+def k(x, budget_share):
+    idx = jnp.arange(budget_share)           # share-dependent iota
+    return x + idx.sum()

@@ -1,0 +1,14 @@
+# repro-lint: scope=src/repro/serve/fixture.py
+"""BAD (bounded telemetry state): every control signal flows through a
+telemetry window's ``push``/``score`` per tick, so an unbounded sample
+buffer there leaks memory at serving rate (rule: bounded-state)."""
+from collections import deque
+
+
+class LeakyWindow:
+    def __init__(self):
+        self.samples = []
+        self.history = deque()       # deque without maxlen
+
+    def push(self, x):
+        self.samples.append(x)       # bare-list append on the tick path

@@ -1,0 +1,24 @@
+# repro-lint: scope=src/repro/nn/fixture.py
+"""GOOD: telemetry stays a data operand — spike decisions go through
+jnp.where, class capacity is a STATIC constant, shares ride along as
+traced values, and None-dispatch happens on the Python default."""
+import jax.numpy as jnp
+
+N_CLASSES = 4                                  # static class capacity
+
+
+def f(x, spike_score):
+    damp = jnp.where(jnp.asarray(spike_score) > 4.0, 0.5, 1.0)
+    return x * damp                            # signal as a data MASK
+
+
+def g(x, class_budgets):
+    if class_budgets is None:                  # Python-default dispatch
+        return x
+    buf = jnp.zeros((N_CLASSES, 4))            # static shape
+    return x + buf.sum()
+
+
+def h(x, class_shares):
+    w = jnp.asarray(class_shares)              # data operand, not shape
+    return x * w

@@ -1,0 +1,18 @@
+# repro-lint: scope=src/repro/serve/fixture.py
+"""GOOD: the telemetry window is bounded by construction — one maxlen
+deque holds the samples, scalar accumulators carry everything else."""
+from collections import deque
+
+
+class BoundedWindow:
+    def __init__(self, maxlen=64):
+        self._buf = deque(maxlen=maxlen)
+        self.n_spikes = 0
+
+    def push(self, x):
+        self._buf.append(float(x))
+
+    def score(self, x):
+        if not self._buf:
+            return 0.0
+        return float(x) - sum(self._buf) / len(self._buf)

@@ -76,7 +76,7 @@ def test_dense_engine_accounting(dense_engine):
         assert 1.0 - d_cfg / d_exact == pytest.approx(
             float(MAC_SAVING_FRAC[c]), rel=1e-6, abs=1e-9), c
         # every charge of the round ran at the round's config rate
-        for kind, _, pj in rows:
+        for kind, _, pj, _ in rows:
             assert pj == pytest.approx(float(ENERGY_PER_MAC_PJ[c]),
                                        rel=1e-12), kind
 
@@ -89,13 +89,13 @@ def test_dense_engine_accounting(dense_engine):
 
     # (c) the log IS the integral: per-step rows sum exactly (same-order
     # float sum) to the lifetime totals, kinds/tokens line up
-    kinds = [k for k, _, _ in eng.energy_log]
+    kinds = [k for k, *_ in eng.energy_log]
     assert kinds.count("prefill") == 6          # one per request
     assert kinds.count("decode") == eng.n_decode_steps
     assert len(kinds) == 6 + eng.n_decode_steps
-    total = sum(t * pj for _, t, pj in eng.energy_log)
+    total = sum(t * pj for _, t, pj, _ in eng.energy_log)
     assert total == pytest.approx(eng.mac_energy_pj_per_param, rel=1e-12)
-    tokens = sum(t for _, t, _ in eng.energy_log)
+    tokens = sum(t for _, t, *_ in eng.energy_log)
     assert tokens == eng.n_tokens_charged
     assert eng.exact_energy_pj_per_param == pytest.approx(
         tokens * float(ENERGY_PER_MAC_PJ[0]), rel=1e-12)
@@ -146,7 +146,7 @@ def test_moe_engine_charges_energy_log_at_collapsed_rate(moe_engine):
     _, _, rows = _round(eng, 0, cfg_vec)
     rate = eng._energy_pj_mean(cfg_vec)
     assert rows
-    for kind, tokens, pj in rows:
+    for kind, tokens, pj, _ in rows:
         assert pj == pytest.approx(rate, rel=1e-12), kind
 
 
@@ -169,17 +169,17 @@ def test_probe_decodes_are_billed_and_excluded_from_serve_counters():
     rows = list(eng.energy_log)
     probe_rows = [r for r in rows if r[0] == "probe"]
     assert len(probe_rows) == sched.n_probes > 0
-    for _, _, pj in probe_rows:           # probes run at the EXACT rate
+    for _, _, pj, _ in probe_rows:           # probes run at the EXACT rate
         assert pj == pytest.approx(float(ENERGY_PER_MAC_PJ[0]),
                                    rel=1e-12)
     # rows still sum exactly to the lifetime totals, probes included
-    assert sum(t * pj for _, t, pj in rows) == pytest.approx(
+    assert sum(t * pj for _, t, pj, _ in rows) == pytest.approx(
         eng.mac_energy_pj_per_param, rel=1e-12)
-    assert sum(t for _, t, _ in rows) == eng.n_tokens_charged
+    assert sum(t for _, t, *_ in rows) == eng.n_tokens_charged
     # the serve-only view is the same sum MINUS the probe rows
-    assert sum(t * pj for k, t, pj in rows if k != "probe") \
+    assert sum(t * pj for k, t, pj, _ in rows if k != "probe") \
         == pytest.approx(eng.serve_mac_energy_pj_per_param, rel=1e-12)
-    assert sum(t for k, t, _ in rows if k != "probe") \
+    assert sum(t for k, t, *_ in rows if k != "probe") \
         == eng.n_serve_tokens_charged < eng.n_tokens_charged
 
 
@@ -195,22 +195,57 @@ def test_speculative_passes_land_in_the_same_accounting():
                        max_new_tokens=6))
     eng.run(max_ticks=60)
     rows = list(eng.energy_log)
-    kinds = [k for k, _, _ in rows]
+    kinds = [k for k, *_ in rows]
     assert "spec_draft" in kinds and "spec_verify" in kinds
     assert kinds.count("spec_verify") == eng.n_verify_steps
-    for k, _, pj in rows:
+    for k, _, pj, _ in rows:
         if k == "spec_draft":             # drafts at the draft config
             assert pj == pytest.approx(float(ENERGY_PER_MAC_PJ[8]),
                                        rel=1e-12)
         elif k == "spec_verify":          # verify at the pool config
             assert pj == pytest.approx(float(ENERGY_PER_MAC_PJ[0]),
                                        rel=1e-12)
-    assert sum(t * pj for _, t, pj in rows) == pytest.approx(
+    assert sum(t * pj for _, t, pj, _ in rows) == pytest.approx(
         eng.mac_energy_pj_per_param, rel=1e-12)
-    assert sum(t for _, t, _ in rows) == eng.n_tokens_charged
+    assert sum(t for _, t, *_ in rows) == eng.n_tokens_charged
     # spec passes ARE service traffic: they stay in the serve counters
     assert eng.serve_mac_energy_pj_per_param == pytest.approx(
         eng.mac_energy_pj_per_param, rel=1e-12)
+
+
+# --- per-class attribution (PR 10, DESIGN.md §13) ---------------------------
+
+def test_energy_rows_attribute_to_traffic_classes():
+    """Every non-probe charge lands on its request's class (pooled
+    decode charges split one row per class), per-class rows sum to the
+    per-class serve counters, the class counters sum back to the global
+    serve counters, and probe rows stay classless."""
+    from repro.serve.scheduler import PowerBudgetScheduler
+    T, cfg, params = _small_model()
+    sched = PowerBudgetScheduler(10.0, probe_every=2,
+                                 retune_every=10**9)
+    eng = Engine(params, cfg, max_batch=2, max_len=64, approx_cfg=1,
+                 scheduler=sched)
+    eng.submit(Request(rid=0, prompt=np.arange(6) % 64,
+                       max_new_tokens=4, cls="interactive"))
+    eng.submit(Request(rid=1, prompt=np.arange(8) % 64,
+                       max_new_tokens=6, cls="batch"))
+    eng.run(max_ticks=60)
+    rows = list(eng.energy_log)
+    classes = {c for _, _, _, c in rows}
+    assert {"interactive", "batch", None} <= classes
+    for k, _, _, c in rows:               # probes are classless, and
+        assert (c is None) == (k == "probe")   # only probes are
+    for name in ("interactive", "batch"):
+        assert sum(t * pj for _, t, pj, c in rows if c == name) \
+            == pytest.approx(eng.serve_energy_by_class[name], rel=1e-12)
+        assert sum(t for _, t, _, c in rows if c == name) \
+            == eng.serve_tokens_by_class[name]
+    # the class split partitions the serve-only integrals exactly
+    assert sum(eng.serve_energy_by_class.values()) == pytest.approx(
+        eng.serve_mac_energy_pj_per_param, rel=1e-12)
+    assert sum(eng.serve_tokens_by_class.values()) \
+        == eng.n_serve_tokens_charged
 
 
 # --- the shared joules/token view ------------------------------------------

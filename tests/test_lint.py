@@ -31,11 +31,14 @@ BAD = {
     "bad_pallas_hygiene": "pallas-hygiene",
     "bad_table_shape": "cfg-shape",               # PR 8 paged-KV operands
     "bad_spec_shape": "cfg-shape",                # PR 9 speculative knobs
+    "bad_telemetry_shape": "cfg-shape",           # PR 10 telemetry/budgets
+    "bad_telemetry_state": "bounded-state",       # PR 10 window buffers
 }
 GOOD = ["good_trace_safety", "good_cfg_shape", "good_single_rounding",
         "good_bounded_state", "good_resilience_tick",
         "good_injected_clock", "good_pallas_hygiene",
-        "good_suppression", "good_table_shape", "good_spec_shape"]
+        "good_suppression", "good_table_shape", "good_spec_shape",
+        "good_telemetry_shape", "good_telemetry_state"]
 
 
 @pytest.mark.parametrize("stem,rule_id", sorted(BAD.items()))

@@ -54,7 +54,28 @@ def run() -> list[Finding]:
         fail("README.md", 1,
              f"references BENCH artifact no benchmark emits: {name}")
 
-    # 4. CHANGES.md PR numbering is contiguous (1..max, each exactly once)
+    # 4. CI keeps the tier-1 runtime budget gate: every PR adds tests,
+    # so the suite only stays inside its wall-time budget if the gate
+    # that fails CI past 1080 s cannot be silently dropped or loosened
+    ci = ROOT / ".github" / "workflows" / "ci.yml"
+    if not ci.exists():
+        fail(".github/workflows/ci.yml", 1, "CI workflow missing")
+    else:
+        ci_text = ci.read_text()
+        m = re.search(r'"\$wall"\s+-gt\s+(\d+)', ci_text)
+        if not m:
+            fail(str(ci.relative_to(ROOT)), 1,
+                 "tier-1 wall-time gate ('$wall' -gt N) missing")
+        elif int(m.group(1)) > 1080:
+            ln = ci_text.count("\n", 0, m.start()) + 1
+            fail(str(ci.relative_to(ROOT)), ln,
+                 f"tier-1 runtime budget loosened past 1080s "
+                 f"({m.group(1)}s) — trim tests instead")
+        if "python -m pytest -x -q" not in ci_text:
+            fail(str(ci.relative_to(ROOT)), 1,
+                 "tier-1 pytest step missing from CI")
+
+    # 5. CHANGES.md PR numbering is contiguous (1..max, each exactly once)
     changes = (ROOT / "CHANGES.md").read_text()
     prs = [int(n) for n in re.findall(r"^- PR (\d+):", changes, flags=re.M)]
     if not prs:

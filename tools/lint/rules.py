@@ -23,6 +23,15 @@ TABLE_NAMES = {"block_table", "block_tables", "tables", "page_idx",
 # either picks a shape or steers a Python branch in a traced body, the
 # live (k, draft-cfg) sweep compiles one executable per cell (PR 9)
 SPEC_NAMES = {"draft_cfg", "draft_config", "draft_k", "spec_k", "k_draft"}
+# telemetry / per-class-budget knobs (PR 10): spike scores and class
+# budget splits are host-side control signals that feed the SAME traced
+# config knob — if one leaks into a shape or a traced branch, every
+# telemetry reading mints a new executable.  Plain ``window`` stays off
+# this list: in nn/ it is a STATIC sliding-window size that legitimately
+# shapes buffers; the telemetry-window concern (unbounded sample
+# buffers) is bounded-state's job via the ``push`` tick method.
+TELEMETRY_NAMES = {"class_budgets", "class_shares", "budget_share",
+                   "spike_score", "spike_level"}
 SCALAR_PREFETCH = {"cfg_ref", "rows_ref", "xscale_ref", "bt_ref", "len_ref"}
 LAX_HOFS = {"scan", "cond", "while_loop", "fori_loop", "switch", "map",
             "associative_scan"}
@@ -258,11 +267,14 @@ def cfg_shape(ctx: FileContext):
     branch derived from them retraces per occupancy instead.  The
     speculative knobs (SPEC_NAMES) likewise: the draft config is traced
     data and the draft depth a host loop count — only the static
-    ``max_k`` window may shape anything (PR 9)."""
+    ``max_k`` window may shape anything (PR 9).  Telemetry/class-budget
+    signals (TELEMETRY_NAMES) are held to the same bar: a spike score
+    or budget split is a host control signal feeding the traced config
+    DATA operand, never a shape or traced branch (PR 10)."""
     if not ctx.in_scope(SRC + "nn/", SRC + "kernels/", SRC + "serve/"):
         return
     shape_ctors = {"zeros", "ones", "full", "empty", "arange"}
-    watched = CONFIG_NAMES | TABLE_NAMES | SPEC_NAMES
+    watched = CONFIG_NAMES | TABLE_NAMES | SPEC_NAMES | TELEMETRY_NAMES
 
     def problematic(test: ast.AST, names=watched) -> ast.Name | None:
         """First config Name in `test` that is not inside an isinstance
@@ -304,6 +316,8 @@ def cfg_shape(ctx: FileContext):
             return "config"
         if name in SPEC_NAMES:
             return "speculative-knob"
+        if name in TELEMETRY_NAMES:
+            return "telemetry/class-budget"
         return "block-table/length"
 
     # serve/ is mostly host loop (branching on Python-int configs is its
@@ -424,7 +438,11 @@ def single_rounding(ctx: FileContext):
 # ---------------------------------------------------------------------------
 
 TICK_METHODS = {"step", "_step", "tick", "on_tick", "on_step", "record",
-                "record_probe", "observe", "begin_tick", "arrivals"}
+                "record_probe", "observe", "begin_tick", "arrivals",
+                # telemetry windows (PR 10): every control signal now
+                # flows through push/score per tick, so an unbounded
+                # sample buffer there leaks at serving rate
+                "push", "score"}
 
 
 @rule("bounded-state")
